@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV.  The roofline table (per-arch
+TPU-target analysis) is produced separately by ``repro.launch.roofline``
+from the dry-run artifacts and summarized here if present.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (elasticity, farm_scalability, fault_tolerance,
+                            kernels, load_balance, normal_form)
+
+    print("name,us_per_call,derived")
+    for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
+                elasticity, kernels):
+        for name, us, derived in mod.bench():
+            print(f"{name},{us:.1f},{derived}")
+
+    # roofline summary (if the dry-run grid has been produced)
+    dr = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+    files = glob.glob(os.path.join(dr, "*.json"))
+    if files:
+        from repro.launch.roofline import analyze_cell
+
+        ok = skipped = err = 0
+        fits = 0
+        for f in files:
+            rec = json.load(open(f))
+            if rec.get("status") == "ok":
+                ok += 1
+                row = analyze_cell(rec)
+                if row and row["fits_hbm"]:
+                    fits += 1
+            elif rec.get("status") == "skipped":
+                skipped += 1
+            else:
+                err += 1
+        print(f"dryrun/cells_ok,{ok},skipped={skipped} errors={err} "
+              f"fits_hbm={fits}/{ok}")
+
+
+if __name__ == "__main__":
+    main()

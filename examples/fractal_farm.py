@@ -1,0 +1,83 @@
+"""Mandelbrot tiles over the farm — the paper's canonical example family
+("several fractal calculations, basically all the ones where each point can
+be calculated independently").
+
+Each task is one image tile; the worker program is a jitted escape-time
+kernel (lax.fori_loop).  A slow service and a killed service are included to
+show load balancing + fault tolerance on a heterogeneous 'cluster'.
+
+    PYTHONPATH=src python examples/fractal_farm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BasicClient, LookupService, Program, Service
+
+SIZE = 256  # full image (SIZE x SIZE)
+TILE = 64
+MAX_ITER = 64
+
+
+def mandelbrot_tile(task):
+    """task: {"x0","y0"} tile origin in [0,1]^2 of the complex window."""
+    x0, y0 = task["x0"], task["y0"]
+    xs = x0 + jnp.arange(TILE) / SIZE
+    ys = y0 + jnp.arange(TILE) / SIZE
+    re = -2.0 + 2.7 * xs[None, :]
+    im = -1.2 + 2.4 * ys[:, None]
+    c = re + 1j * im
+
+    def scan_body(zn, i):
+        z, n = zn
+        z = z * z + c
+        n = jnp.where((jnp.abs(z) > 2.0) & (n == 0), i, n)
+        return (z, n), None
+
+    (z, n), _ = jax.lax.scan(scan_body, (jnp.zeros_like(c), jnp.zeros(c.shape, jnp.int32)),
+                             jnp.arange(1, MAX_ITER + 1))
+    return {"x0": x0, "y0": y0, "tile": n}
+
+
+def main():
+    lookup = LookupService()
+    services = [
+        Service(lookup, service_id="fast-0"),
+        Service(lookup, service_id="fast-1"),
+        Service(lookup, service_id="slow", task_delay_s=0.02),
+        Service(lookup, service_id="flaky"),
+    ]
+    for s in services:
+        s.start()
+    services[-1].fail_after(2)  # dies after 2 tiles; tasks get rescheduled
+
+    tasks = [{"x0": jnp.asarray(x / SIZE), "y0": jnp.asarray(y / SIZE)}
+             for y in range(0, SIZE, TILE) for x in range(0, SIZE, TILE)]
+    out: list = []
+    t0 = time.perf_counter()
+    cm = BasicClient(Program(mandelbrot_tile, name="mandelbrot"), None,
+                     tasks, out, lookup=lookup, lease_s=10.0)
+    cm.compute(timeout=600)
+    dt = time.perf_counter() - t0
+
+    img = np.zeros((SIZE, SIZE), np.int32)
+    for r in out:
+        x0 = int(round(float(r["x0"]) * SIZE))
+        y0 = int(round(float(r["y0"]) * SIZE))
+        img[y0:y0 + TILE, x0:x0 + TILE] = np.asarray(r["tile"])
+    inside = (img == 0).mean()
+    print(f"{len(tasks)} tiles in {dt:.2f}s; interior fraction {inside:.3f}")
+    print("per-service:", cm.stats()["per_service"])
+    print("reschedules:", cm.stats()["reschedules"])
+    # crude ASCII preview
+    chars = " .:-=+*#%@"
+    for row in img[:: SIZE // 24, :: SIZE // 48]:
+        print("".join(chars[min(int(v) * len(chars) // MAX_ITER,
+                                len(chars) - 1)] for v in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: the paper's two-line API on a local 'cluster'.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.core import (BasicClient, Farm, LookupService, Pipe, Program, Seq,
+                        Service)
+
+# --- stand up a tiny cluster (normally: one Service per pod/workstation) --
+lookup = LookupService()
+for _ in range(3):
+    Service(lookup).start()
+
+# --- the paper's two lines ------------------------------------------------
+program = Program(lambda x: x * x + 1, name="poly")
+tasks = [jnp.asarray(float(i)) for i in range(16)]
+output: list = []
+
+cm = BasicClient(program, None, tasks, output, lookup=lookup)
+cm.compute()
+
+print("results :", [float(v) for v in output])
+print("stats   :", cm.stats())
+
+# --- skeleton composition: pipe(farm, seq) normalizes to one fused farm ---
+skel = Pipe(Farm(Seq(Program(lambda x: x + 10, name="shift"))),
+            Seq(Program(lambda x: x * 2, name="scale")))
+out2: list = []
+BasicClient(skel, None, tasks, out2, lookup=lookup).compute()
+print("pipeline:", [float(v) for v in out2])

@@ -1,0 +1,2 @@
+from .checkpointer import (AsyncCheckpointer, Checkpointer,  # noqa: F401
+                           latest_step, restore, save)

@@ -1,0 +1,17 @@
+"""JJPF core: the paper's contribution as a composable runtime.
+
+Two-line API (paper §2)::
+
+    from repro.core import BasicClient
+    cm = BasicClient(program, None, input_tasks, output)
+    cm.compute()
+"""
+
+from .client import BasicClient, ControlThread  # noqa: F401
+from .contracts import ApplicationManager, ParDegreeContract  # noqa: F401
+from .discovery import LookupService, ServiceDescriptor, new_service_id  # noqa: F401
+from .futures import FarmExecutor  # noqa: F401
+from .normal_form import collect_stage_programs, normal_form_depth, normalize  # noqa: F401
+from .repository import TaskRepository, TaskState  # noqa: F401
+from .service import Service, ServiceFailure  # noqa: F401
+from .skeletons import Farm, Pipe, Program, Seq, Skeleton, compose_programs, interpret  # noqa: F401

@@ -1,0 +1,207 @@
+"""BasicClient — the paper's two-line API, and its control threads.
+
+    cm = BasicClient(program, None, input_tasks, output)
+    cm.compute()
+
+Paper Algorithm 1:
+    1 network discovery of the LookupService;
+    2 query lookup for registered services;
+    3 if services are available then
+    4    foreach service: fork a specific control thread;
+    7    wait the end of computation;
+    9 terminate
+
+Each control thread serves one recruited service: it pulls tasks from the
+centralized ``TaskRepository`` (pull scheduling = automatic load balancing),
+pushes them to the service, stores results, and — on a service failure —
+reports the task back for rescheduling and exits.  An asynchronous lookup
+observer recruits services that appear *during* the computation.
+"""
+
+from __future__ import annotations
+
+import threading
+import uuid
+from typing import Any, Callable, Sequence
+
+from .discovery import LookupService, ServiceDescriptor
+from .normal_form import normal_form_depth, normalize
+from .repository import TaskRepository
+from .service import Service, ServiceFailure
+from .skeletons import Farm, Program, Seq, Skeleton
+
+
+class ControlThread(threading.Thread):
+    """One per recruited service (paper §2)."""
+
+    def __init__(self, client: "BasicClient", service: Service):
+        super().__init__(daemon=True, name=f"ctl-{service.service_id}")
+        self.client = client
+        self.service = service
+        self.tasks_done = 0
+
+    def run(self) -> None:
+        repo = self.client.repository
+        program = self.client.program
+        try:
+            self.service.prepare(program)
+        except Exception as e:
+            self.client._record_error(e)
+            self.client._thread_finished(self, crashed=True)
+            return
+        while not self.client._stop.is_set():
+            got = repo.get_task(self.service.service_id,
+                                allow_speculation=self.client.speculation)
+            if got is None:
+                if repo.all_done:
+                    break
+                continue
+            task_id, payload = got
+            try:
+                result = self.service.execute(program, payload)
+            except ServiceFailure:
+                repo.fail(task_id, self.service.service_id)
+                self.client._thread_finished(self, crashed=True)
+                return
+            except Exception as e:  # program bug: surface it, don't hang
+                repo.fail(task_id, self.service.service_id)
+                self.client._record_error(e)
+                self.client._thread_finished(self, crashed=True)
+                return
+            if repo.complete(task_id, result, self.service.service_id):
+                self.tasks_done += 1
+        self.client._thread_finished(self, crashed=False)
+
+
+class BasicClient:
+    """The user-facing farm driver."""
+
+    def __init__(self, program: Program | Skeleton | Callable,
+                 contract=None, input_tasks: Sequence[Any] | None = None,
+                 output: list | None = None, *, lookup: LookupService | None = None,
+                 lease_s: float = 30.0, speculation: bool = True,
+                 elastic: bool = True):
+        # --- normal-form pre-processing (paper §2) -------------------- #
+        if isinstance(program, Skeleton):
+            nf = normalize(program)
+            self.fused_stages = normal_form_depth(program)
+            program = nf.worker.program
+        elif not isinstance(program, Program):
+            program = Program(program)
+            self.fused_stages = 1
+        else:
+            self.fused_stages = 1
+        self.program = program
+        self.contract = contract
+        self.lookup = lookup if lookup is not None else _default_lookup()
+        self.client_id = f"client-{uuid.uuid4().hex[:8]}"
+        self.repository = TaskRepository(list(input_tasks or []), lease_s=lease_s)
+        self.output = output if output is not None else []
+        self.speculation = speculation
+        self.elastic = elastic
+
+        self._stop = threading.Event()
+        self._threads_lock = threading.Lock()
+        self._threads: list[ControlThread] = []
+        self._recruited: dict[str, Service] = {}
+        self._errors: list[Exception] = []
+        self._unsubscribe = None
+
+    # ------------------------------------------------------------- #
+    def _recruit(self, desc: ServiceDescriptor) -> bool:
+        service: Service = desc.endpoint
+        if not service.recruit(self.client_id):
+            return False
+        thread = ControlThread(self, service)
+        with self._threads_lock:
+            self._recruited[service.service_id] = service
+            self._threads.append(thread)
+        thread.start()
+        return True
+
+    def _on_new_service(self, desc: ServiceDescriptor) -> None:
+        """Asynchronous recruitment (publish/subscribe path)."""
+        if self._stop.is_set() or self.repository.all_done:
+            return
+        if self.contract is not None and not self.contract.wants_more(self):
+            return
+        self._recruit(desc)
+
+    def _thread_finished(self, thread: ControlThread, *, crashed: bool) -> None:
+        with self._threads_lock:
+            svc = self._recruited.pop(thread.service.service_id, None)
+        if svc is not None and not crashed:
+            # normal completion: hand the service back to the lookup
+            # (paper Algorithm 2's while-loop: serve one client, re-register)
+            svc.release()
+
+    def _record_error(self, e: Exception) -> None:
+        self._errors.append(e)
+
+    @property
+    def n_active_services(self) -> int:
+        with self._threads_lock:
+            return len(self._recruited)
+
+    # ------------------------------------------------------------- #
+    def compute(self, *, timeout: float | None = None) -> list:
+        """Run the farm to completion; returns (and fills) the output list."""
+        if self.elastic:
+            self._unsubscribe = self.lookup.subscribe(self._on_new_service)
+        try:
+            # synchronous recruitment of everything currently registered
+            for desc in self.lookup.query():
+                if self.contract is not None and not self.contract.wants_more(self):
+                    break
+                self._recruit(desc)
+            if self.n_active_services == 0 and len(self.repository):
+                # No services yet: rely on the observer (or fail fast if
+                # inelastic).
+                if not self.elastic:
+                    raise RuntimeError("no services available in lookup")
+            import time as _time
+
+            deadline = None if timeout is None else _time.monotonic() + timeout
+            while not self.repository.all_done:
+                if self._errors:
+                    raise self._errors[0]
+                slice_s = 0.2
+                if deadline is not None:
+                    remaining = deadline - _time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"farm did not finish: {self.repository.stats()}")
+                    slice_s = min(slice_s, remaining)
+                self.repository.wait_all(slice_s)
+            if self._errors:
+                raise self._errors[0]
+        finally:
+            self._stop.set()
+            if self._unsubscribe:
+                self._unsubscribe()
+            with self._threads_lock:
+                services = list(self._recruited.values())
+            for s in services:
+                s.release()
+        results = self.repository.results()
+        self.output[:] = results
+        return self.output
+
+    def stats(self) -> dict:
+        s = self.repository.stats()
+        s["fused_stages"] = self.fused_stages
+        return s
+
+
+# --------------------------------------------------------------------- #
+_GLOBAL_LOOKUP: LookupService | None = None
+_GLOBAL_LOOKUP_LOCK = threading.Lock()
+
+
+def _default_lookup() -> LookupService:
+    """Process-wide lookup (the 'network discovery of the LookupService')."""
+    global _GLOBAL_LOOKUP
+    with _GLOBAL_LOOKUP_LOCK:
+        if _GLOBAL_LOOKUP is None:
+            _GLOBAL_LOOKUP = LookupService()
+        return _GLOBAL_LOOKUP

@@ -1,0 +1,92 @@
+"""Service discovery — the Jini lookup service, re-homed.
+
+Keeps Jini's *protocol* exactly (paper §2): services **register** a
+descriptor; clients issue a **synchronous query** for currently-available
+services AND register an **asynchronous observer** that alerts them when new
+services appear mid-run (elastic recruitment); a recruited service
+**unregisters** (each service serves one client at a time) and re-registers
+when released.
+
+The registry is in-process here (a TPU fleet has no JVM multicast); swapping
+in etcd/GCS pub-sub means re-implementing exactly these four methods.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class ServiceDescriptor:
+    service_id: str
+    endpoint: Any  # in-process: the Service object itself
+    capabilities: dict = field(default_factory=dict)
+    registered_at: float = field(default_factory=time.monotonic)
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.capabilities.get("n_devices", 1))
+
+    @property
+    def peak_flops(self) -> float:
+        return float(self.capabilities.get("peak_flops", 0.0))
+
+
+class LookupService:
+    """The lookup: register / unregister / query / subscribe."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._services: dict[str, ServiceDescriptor] = {}
+        self._observers: list[Callable[[ServiceDescriptor], None]] = []
+
+    # -- service side ------------------------------------------------ #
+    def register(self, descriptor: ServiceDescriptor) -> None:
+        with self._lock:
+            self._services[descriptor.service_id] = descriptor
+            observers = list(self._observers)
+        for cb in observers:  # async recruitment path (publish/subscribe)
+            try:
+                cb(descriptor)
+            except Exception:
+                pass
+
+    def unregister(self, service_id: str) -> None:
+        with self._lock:
+            self._services.pop(service_id, None)
+
+    # -- client side -------------------------------------------------- #
+    def query(self, predicate: Callable[[ServiceDescriptor], bool] | None = None
+              ) -> list[ServiceDescriptor]:
+        """Synchronous discovery (paper: 'directly queries the Lookup
+        Service about the Service Ids of the available services')."""
+        with self._lock:
+            descs = list(self._services.values())
+        if predicate:
+            descs = [d for d in descs if predicate(d)]
+        return descs
+
+    def subscribe(self, callback: Callable[[ServiceDescriptor], None]) -> Callable:
+        """Asynchronous discovery: ``callback`` fires for every service that
+        registers from now on.  Returns an unsubscribe handle."""
+        with self._lock:
+            self._observers.append(callback)
+
+        def unsubscribe():
+            with self._lock:
+                if callback in self._observers:
+                    self._observers.remove(callback)
+
+        return unsubscribe
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._services)
+
+
+def new_service_id(prefix: str = "svc") -> str:
+    return f"{prefix}-{uuid.uuid4().hex[:8]}"

@@ -1,0 +1,86 @@
+"""Future-based farm driver (the paper's §4 future work, implemented).
+
+*"...the introduction of futures for reducing the number of thread required
+on client side to manage the computation."*
+
+``FarmExecutor`` exposes an ``Executor``-style API: ``submit(task)`` returns
+a ``concurrent.futures.Future`` immediately; the stream can keep growing
+while the farm runs.  Client-side threads scale with the number of
+*services*, never with the number of in-flight tasks (the per-task control
+state lives in the repository + future map, not in a thread)."""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, Sequence
+
+from .client import BasicClient, _default_lookup
+from .discovery import LookupService
+from .repository import TaskRepository
+from .skeletons import Program, Skeleton
+
+
+class FarmExecutor:
+    def __init__(self, program: Program | Skeleton | Callable, *,
+                 lookup: LookupService | None = None, lease_s: float = 30.0,
+                 speculation: bool = True):
+        self._futures: dict[int, Future] = {}
+        self._flock = threading.Lock()
+        self._client = BasicClient(
+            program, None, [], lookup=lookup, lease_s=lease_s,
+            speculation=speculation)
+        # swap in a streaming completion-callback repository
+        self._client.repository = TaskRepository(
+            [], lease_s=lease_s, on_complete=self._resolve, streaming=True)
+        self._started = False
+        self._start_lock = threading.Lock()
+
+    def _resolve(self, task_id: int, result: Any) -> None:
+        with self._flock:
+            fut = self._futures.pop(task_id, None)
+        if fut is not None:
+            fut.set_result(result)
+
+    def _ensure_started(self) -> None:
+        with self._start_lock:
+            if self._started:
+                return
+            self._started = True
+            # recruit current services + subscribe for new ones
+            self._client._unsubscribe = self._client.lookup.subscribe(
+                self._client._on_new_service)
+            for desc in self._client.lookup.query():
+                self._client._recruit(desc)
+
+    # ------------------------------------------------------------- #
+    def submit(self, task: Any) -> Future:
+        self._ensure_started()
+        fut: Future = Future()
+        # register the future under the id the repository will assign
+        with self._flock:
+            tid = self._client.repository.add_task(task)
+            self._futures[tid] = fut
+        return fut
+
+    def map(self, tasks: Sequence[Any]) -> list[Future]:
+        return [self.submit(t) for t in tasks]
+
+    def shutdown(self) -> None:
+        self._client.repository.close()
+        self._client._stop.set()
+        if self._client._unsubscribe:
+            self._client._unsubscribe()
+        with self._client._threads_lock:
+            services = list(self._client._recruited.values())
+        for s in services:
+            s.release()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    def stats(self) -> dict:
+        return self._client.stats()

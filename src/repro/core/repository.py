@@ -1,0 +1,211 @@
+"""The centralized, synchronized task repository.
+
+The paper: *"Each control thread fetches tasks to be delivered to the remote
+nodes from a centralized, synchronized task repository"* — pull-based
+scheduling is what gives JJPF automatic load balancing, and keeping every
+task on the client until its result arrives is what gives fault tolerance
+("the task can be rescheduled as soon as the control thread understands that
+the corresponding service node has been disconnected").
+
+Extensions beyond the paper (documented in DESIGN.md):
+  * lease timeouts — a recruited service that stops heartbeating loses its
+    lease and the task is re-enqueued;
+  * speculative re-execution of stragglers (MapReduce-style backup tasks):
+    ``complete`` is idempotent, first result wins.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any
+
+
+class TaskState(Enum):
+    PENDING = "pending"
+    LEASED = "leased"
+    DONE = "done"
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    payload: Any
+    state: TaskState = TaskState.PENDING
+    owners: set = field(default_factory=set)  # services currently computing it
+    lease_deadline: float = 0.0
+    lease_start: float = 0.0
+    result: Any = None
+    attempts: int = 0
+    completed_by: str | None = None
+
+
+class TaskRepository:
+    """Thread-safe pull queue with leases, rescheduling and speculation."""
+
+    def __init__(self, tasks: list, *, lease_s: float = 30.0,
+                 speculation_factor: float = 3.0, on_complete=None,
+                 streaming: bool = False):
+        self._lock = threading.Condition()
+        self.lease_s = lease_s
+        self.speculation_factor = speculation_factor
+        self.on_complete = on_complete  # callable(task_id, result)
+        self.streaming = streaming  # open-ended stream (FarmExecutor)
+        self._closed = False
+        self.records = {i: TaskRecord(i, t) for i, t in enumerate(tasks)}
+        self._pending: list[int] = list(self.records.keys())
+        self._done_count = 0
+        self._durations: list[float] = []
+        self.completions_per_service: dict[str, int] = {}
+        self.reschedules = 0
+        self.speculative_issues = 0
+
+    # ------------------------------------------------------------- #
+    def __len__(self) -> int:
+        return len(self.records)
+
+    @property
+    def all_done(self) -> bool:
+        with self._lock:
+            if self.streaming and not self._closed:
+                return False
+            return self._done_count == len(self.records)
+
+    def close(self) -> None:
+        """End a streaming repository: no more tasks will be added."""
+        with self._lock:
+            self._closed = True
+            self._lock.notify_all()
+
+    def add_task(self, payload) -> int:
+        """Streams can grow while the farm runs."""
+        with self._lock:
+            tid = len(self.records)
+            self.records[tid] = TaskRecord(tid, payload)
+            self._pending.append(tid)
+            self._lock.notify_all()
+            return tid
+
+    # ------------------------------------------------------------- #
+    def get_task(self, service_id: str, *, timeout: float = 0.5,
+                 allow_speculation: bool = True):
+        """Lease the next pending task (or a speculative copy of a
+        straggler).  Returns (task_id, payload) or None if the stream is
+        exhausted (all tasks done) — a None with ``all_done`` False means
+        "try again" (everything currently leased)."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                self._expire_leases_locked()
+                if (self._done_count == len(self.records)
+                        and not (self.streaming and not self._closed)):
+                    return None
+                if self._pending:
+                    tid = self._pending.pop(0)
+                    rec = self.records[tid]
+                    now = time.monotonic()
+                    rec.state = TaskState.LEASED
+                    rec.owners.add(service_id)
+                    rec.lease_start = now
+                    rec.lease_deadline = now + self.lease_s
+                    rec.attempts += 1
+                    return tid, rec.payload
+                if allow_speculation:
+                    tid = self._speculation_candidate_locked(service_id)
+                    if tid is not None:
+                        rec = self.records[tid]
+                        rec.owners.add(service_id)
+                        rec.attempts += 1
+                        self.speculative_issues += 1
+                        return tid, rec.payload
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._lock.wait(remaining)
+
+    def _speculation_candidate_locked(self, service_id: str):
+        """A task leased for >= speculation_factor × median completion time,
+        not already being computed by this service."""
+        if len(self._durations) < 3:
+            return None
+        med = sorted(self._durations)[len(self._durations) // 2]
+        now = time.monotonic()
+        for rec in self.records.values():
+            if (rec.state == TaskState.LEASED
+                    and service_id not in rec.owners
+                    and len(rec.owners) < 2
+                    and now - rec.lease_start > self.speculation_factor * max(med, 1e-3)):
+                return rec.task_id
+        return None
+
+    # ------------------------------------------------------------- #
+    def complete(self, task_id: int, result, service_id: str) -> bool:
+        """Idempotent: the first result wins (speculative duplicates are
+        dropped).  Returns True if this call recorded the result."""
+        with self._lock:
+            rec = self.records[task_id]
+            if rec.state == TaskState.DONE:
+                return False
+            rec.state = TaskState.DONE
+            rec.result = result
+            rec.completed_by = service_id
+            self._done_count += 1
+            self._durations.append(time.monotonic() - rec.lease_start)
+            self.completions_per_service[service_id] = (
+                self.completions_per_service.get(service_id, 0) + 1)
+            self._lock.notify_all()
+        if self.on_complete is not None:
+            self.on_complete(task_id, result)
+        return True
+
+    def fail(self, task_id: int, service_id: str) -> None:
+        """A service died / errored mid-task: reschedule (the paper's natural
+        descheduling point is the task start, so we simply re-enqueue)."""
+        with self._lock:
+            rec = self.records[task_id]
+            rec.owners.discard(service_id)
+            if rec.state == TaskState.LEASED and not rec.owners:
+                rec.state = TaskState.PENDING
+                self._pending.append(task_id)
+                self.reschedules += 1
+                self._lock.notify_all()
+
+    def _expire_leases_locked(self) -> None:
+        now = time.monotonic()
+        for rec in self.records.values():
+            if rec.state == TaskState.LEASED and now > rec.lease_deadline:
+                rec.owners.clear()
+                rec.state = TaskState.PENDING
+                self._pending.append(rec.task_id)
+                self.reschedules += 1
+
+    # ------------------------------------------------------------- #
+    def wait_all(self, timeout: float | None = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._done_count < len(self.records):
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._lock.wait(remaining if remaining is not None else 1.0)
+            return True
+
+    def results(self) -> list:
+        with self._lock:
+            return [self.records[i].result for i in sorted(self.records)]
+
+    def stats(self) -> dict:
+        with self._lock:
+            leased = sum(1 for r in self.records.values()
+                         if r.state == TaskState.LEASED)
+            return {
+                "tasks": len(self.records),
+                "done": self._done_count,
+                "pending": len(self._pending),
+                "leased": leased,
+                "reschedules": self.reschedules,
+                "speculative_issues": self.speculative_issues,
+                "per_service": dict(self.completions_per_service),
+            }

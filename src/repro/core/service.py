@@ -1,0 +1,143 @@
+"""A JJPF service: the distributed slave, re-homed to a JAX device group.
+
+Paper Algorithm 2:
+    1 network discovery of the LookupService;
+    2 while not terminated do
+    3    register into lookup;
+    4    wait for requests;
+    5    unregister from the lookup;   (serve exactly one client)
+    6 end
+
+A service owns a set of JAX devices (here: CPU/host devices standing in for
+a pod slice) and executes *compiled* programs on task payloads.  Fault
+injection (``kill``, ``fail_after``) and a speed factor (heterogeneous
+clusters) are built in for the paper's fault-tolerance and load-balancing
+experiments.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+
+from .discovery import LookupService, ServiceDescriptor, new_service_id
+from .skeletons import Program
+
+
+class ServiceFailure(RuntimeError):
+    """Raised to a control thread when the service has died."""
+
+
+class Service:
+    def __init__(self, lookup: LookupService, *, devices=None,
+                 service_id: str | None = None, speed_factor: float = 1.0,
+                 capabilities: dict | None = None,
+                 task_delay_s: float = 0.0):
+        self.lookup = lookup
+        self.devices = list(devices) if devices else [jax.devices()[0]]
+        self.service_id = service_id or new_service_id()
+        self.speed_factor = speed_factor
+        self.task_delay_s = task_delay_s
+        caps = {"n_devices": len(self.devices),
+                "speed_factor": speed_factor}
+        caps.update(capabilities or {})
+        self.capabilities = caps
+
+        self._lock = threading.Lock()
+        self._alive = True
+        self._recruited_by: str | None = None
+        self._fail_after: int | None = None
+        self._tasks_executed = 0
+        self._compiled: dict[int, Callable] = {}
+        self.last_heartbeat = time.monotonic()
+
+    # ---------------- lifecycle (Algorithm 2) ------------------------ #
+    def start(self) -> None:
+        """Register into the lookup and wait for requests."""
+        self.lookup.register(self.descriptor())
+
+    def descriptor(self) -> ServiceDescriptor:
+        return ServiceDescriptor(self.service_id, self, dict(self.capabilities))
+
+    def recruit(self, client_id: str) -> bool:
+        """A client claims this service; it unregisters (single-client)."""
+        with self._lock:
+            if not self._alive or self._recruited_by is not None:
+                return False
+            self._recruited_by = client_id
+        self.lookup.unregister(self.service_id)
+        return True
+
+    def release(self) -> None:
+        """Client done: re-register for the next one (the while-loop)."""
+        with self._lock:
+            self._recruited_by = None
+            if not self._alive:
+                return
+        self.lookup.register(self.descriptor())
+
+    # ---------------- execution -------------------------------------- #
+    def prepare(self, program: Program) -> None:
+        with self._lock:
+            if id(program) not in self._compiled:
+                self._compiled[id(program)] = program.prepare(self.devices)
+
+    def execute(self, program: Program, payload) -> Any:
+        """Run one task.  Raises ServiceFailure if the node is dead or its
+        fault-injection counter fires."""
+        with self._lock:
+            if not self._alive:
+                raise ServiceFailure(f"{self.service_id} is dead")
+            if self._fail_after is not None and self._tasks_executed >= self._fail_after:
+                self._alive = False
+                raise ServiceFailure(f"{self.service_id} failed (injected)")
+            fn = self._compiled.get(id(program))
+        if fn is None:
+            self.prepare(program)
+            fn = self._compiled[id(program)]
+        if self.task_delay_s:
+            time.sleep(self.task_delay_s)  # network/serialization stand-in
+        result = fn(payload)
+        result = jax.block_until_ready(result)
+        if self.speed_factor != 1.0:
+            # heterogeneity simulation: slower nodes take proportionally longer
+            time.sleep(max(0.0, (self.speed_factor - 1.0)) * 0.002)
+        with self._lock:
+            if not self._alive:  # killed mid-task
+                raise ServiceFailure(f"{self.service_id} died mid-task")
+            self._tasks_executed += 1
+            self.last_heartbeat = time.monotonic()
+        return result
+
+    # ---------------- fault injection -------------------------------- #
+    def kill(self) -> None:
+        with self._lock:
+            self._alive = False
+        self.lookup.unregister(self.service_id)
+
+    def revive(self) -> None:
+        with self._lock:
+            self._alive = True
+            self._fail_after = None
+            self._recruited_by = None
+        self.lookup.register(self.descriptor())
+
+    def fail_after(self, n_tasks: int) -> None:
+        with self._lock:
+            self._fail_after = self._tasks_executed + n_tasks
+
+    @property
+    def alive(self) -> bool:
+        with self._lock:
+            return self._alive
+
+    @property
+    def tasks_executed(self) -> int:
+        with self._lock:
+            return self._tasks_executed
+
+    def heartbeat_age(self) -> float:
+        return time.monotonic() - self.last_heartbeat

@@ -1,0 +1,122 @@
+"""Skeleton AST: the composition language of JJPF.
+
+The paper: *"Programmers must write their applications as an arbitrary
+composition of task farm and pipeline computation patterns."*  A ``Program``
+is the JAX analogue of the paper's ``ProcessIf`` (setData / run / getData):
+a pure function from task payload to result, plus an optional ``prepare``
+step that specializes (jit-compiles) it for a service's devices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+
+
+class Program:
+    """ProcessIf analogue.  ``fn`` must be a pure function (pytree -> pytree).
+
+    ``prepare(devices)`` returns a compiled callable for a service; the
+    default jit-compiles onto the service's first device.  Set
+    ``jit=False`` for host-side tasks (e.g. I/O simulation in tests).
+    """
+
+    def __init__(self, fn: Callable, *, name: str | None = None, jit: bool = True,
+                 static_argnames: Sequence[str] = ()):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", "program")
+        self._jit = jit
+        self._static = tuple(static_argnames)
+
+    def prepare(self, devices=None) -> Callable:
+        if not self._jit:
+            return self.fn
+        if devices:
+            return jax.jit(self.fn, static_argnames=self._static,
+                           device=devices[0])
+        return jax.jit(self.fn, static_argnames=self._static)
+
+    def __call__(self, task):
+        return self.fn(task)
+
+    def __repr__(self):
+        return f"Program({self.name})"
+
+
+def compose_programs(programs: Sequence[Program], name=None) -> Program:
+    """Sequential composition g_n ∘ ... ∘ g_1 as ONE program.
+
+    On TPU this is the payoff of the normal form: the composed stages become
+    a single XLA program (cross-stage fusion, no host round-trips between
+    stages)."""
+    progs = list(programs)
+
+    def fused(task):
+        for p in progs:
+            task = p.fn(task)
+        return task
+
+    return Program(fused, name=name or "∘".join(p.name for p in progs),
+                   jit=all(p._jit for p in progs))
+
+
+# ----------------------------- AST ----------------------------------- #
+@dataclass(frozen=True)
+class Skeleton:
+    def pretty(self) -> str:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Seq(Skeleton):
+    program: Program
+
+    def pretty(self) -> str:
+        return f"seq({self.program.name})"
+
+
+@dataclass(frozen=True)
+class Pipe(Skeleton):
+    stages: tuple
+
+    def __init__(self, *stages):
+        stages = tuple(s if isinstance(s, Skeleton) else Seq(_as_program(s))
+                       for s in stages)
+        object.__setattr__(self, "stages", stages)
+
+    def pretty(self) -> str:
+        return "pipe(" + ", ".join(s.pretty() for s in self.stages) + ")"
+
+
+@dataclass(frozen=True)
+class Farm(Skeleton):
+    worker: Skeleton
+
+    def __init__(self, worker):
+        if not isinstance(worker, Skeleton):
+            worker = Seq(_as_program(worker))
+        object.__setattr__(self, "worker", worker)
+
+    def pretty(self) -> str:
+        return f"farm({self.worker.pretty()})"
+
+
+def _as_program(x) -> Program:
+    return x if isinstance(x, Program) else Program(x)
+
+
+# ------------------- reference (sequential) semantics ----------------- #
+def interpret(skel: Skeleton, tasks: list) -> list:
+    """Denotational reference: what the skeleton means on a task stream.
+    Used by tests to check the normal form preserves semantics."""
+    if isinstance(skel, Seq):
+        return [skel.program(t) for t in tasks]
+    if isinstance(skel, Pipe):
+        for s in skel.stages:
+            tasks = interpret(s, tasks)
+        return tasks
+    if isinstance(skel, Farm):
+        return interpret(skel.worker, tasks)
+    raise TypeError(skel)

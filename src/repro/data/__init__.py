@@ -1,0 +1,2 @@
+from .pipeline import (MarkovDataset, RandomTokenDataset, ShardedLoader,  # noqa: F401
+                       make_dataset)

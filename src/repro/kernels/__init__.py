@@ -1,0 +1,77 @@
+"""Pallas TPU kernels with XLA fallbacks.
+
+``set_backend("pallas")`` routes the hot paths (flash attention, decode
+attention, mamba scan) through the Pallas kernels (TPU target; on CPU they
+run in interpret mode, which tests use for validation).  The default
+``"xla"`` backend uses the chunked pure-jnp implementations — backend-neutral
+and what the dry-run grid lowers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_BACKEND = "xla"
+_INTERPRET = False  # forced True on CPU-only hosts by tests
+
+
+def set_backend(name: str, *, interpret: bool | None = None) -> None:
+    global _BACKEND, _INTERPRET
+    assert name in ("xla", "pallas"), name
+    _BACKEND = name
+    if interpret is not None:
+        _INTERPRET = interpret
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str, *, interpret: bool = False):
+    global _BACKEND, _INTERPRET
+    prev = (_BACKEND, _INTERPRET)
+    set_backend(name, interpret=interpret)
+    try:
+        yield
+    finally:
+        _BACKEND, _INTERPRET = prev
+
+
+def flash_attention_dispatch(q, k, v, *, causal=True, window=None,
+                             block_skip=False):
+    if _BACKEND == "pallas" and window is None:
+        from .flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, interpret=_INTERPRET)
+    # XLA path: O(S) memory in fwd AND bwd (manual flash backward), run
+    # under shard_map when a mesh is active (collective-free attention).
+    from .flash_attention.sharded import flash_attention_tp
+
+    return flash_attention_tp(q, k, v, causal=causal, window=window)
+
+
+def decode_attention_dispatch(q, k_cache, v_cache, *, cache_index, window=None):
+    if _BACKEND == "pallas" and window is None:
+        from .decode_attention import ops as da_ops
+
+        return da_ops.decode_attention(
+            q, k_cache, v_cache, cache_index=cache_index, interpret=_INTERPRET
+        )
+    # sequence-parallel flash-decode under an active mesh, GSPMD otherwise
+    from .decode_attention.sharded import decode_attention_tp
+
+    return decode_attention_tp(
+        q, k_cache, v_cache, cache_index=cache_index, window=window
+    )
+
+
+def mamba_scan_dispatch(x, dt, A, B, C, h0=None):
+    """x,dt: (b,s,d); A: (d,n); B,C: (b,s,n). Returns (y, h_final)."""
+    if _BACKEND == "pallas":
+        from .mamba_scan import ops as ms_ops
+
+        return ms_ops.mamba_scan(x, dt, A, B, C, h0=h0, interpret=_INTERPRET)
+    from .mamba_scan import ref as ms_ref
+
+    return ms_ref.mamba_scan_ref(x, dt, A, B, C, h0=h0)

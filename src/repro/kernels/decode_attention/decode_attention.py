@@ -1,0 +1,110 @@
+"""Flash-decode kernel: one query token vs a long KV cache (Pallas, TPU).
+
+The serving hot path.  Grid = (batch, q_heads, kv_blocks), kv sequential;
+the (m, l, acc) online-softmax state sits in VMEM scratch.  The valid cache
+length arrives as a *prefetched scalar* (``cache_index``), so blocks past
+the valid prefix are skipped entirely — decode cost tracks the true cache
+occupancy, not the allocated ring size.  GQA via the k/v index_map
+(q-head -> kv-head h*K//H), like the prefill kernel.
+
+VMEM per grid step: k/v tiles 2 * (block_k=512, D=128) * 2B = 256 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, n_kv_blocks: int):
+    kb = pl.program_id(2)
+    cache_index = idx_ref[0]
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(k_pos <= cache_index, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p.astype(v.dtype), v,
+                                              (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    # skip blocks entirely past the valid cache prefix
+    pl.when(kb * block_k <= cache_index)(_compute)
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, *, cache_index,
+                         block_k: int = 512, interpret: bool = False):
+    """q: (B, 1, H, D); caches: (B, S, K, D[v]); cache_index: scalar int32
+    (last valid position, inclusive).  Returns (B, 1, H, Dv)."""
+    B, one, H, D = q.shape
+    assert one == 1
+    _, S, K, Dv = v_cache.shape
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = D**-0.5
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, 1, D)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, K, S, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=nk)
+    idx = jnp.asarray(cache_index, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            # NOTE: with num_scalar_prefetch=1 the scalar ref is appended to
+            # every index_map's arguments.
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, kb, idx: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, kb, idx, K=K, H=H: (b, h * K // H, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, kb, idx, K=K, H=H: (b, h * K // H, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dv),
+                               lambda b, h, kb, idx: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, Dv), v_cache.dtype),
+        interpret=interpret,
+    )(idx, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

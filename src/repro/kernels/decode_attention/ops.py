@@ -1,0 +1,11 @@
+"""jit'd wrapper for the flash-decode kernel (inference only — no vjp)."""
+
+from __future__ import annotations
+
+from .decode_attention import decode_attention_fwd
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_index, block_k: int = 512,
+                     interpret: bool = False):
+    return decode_attention_fwd(q, k_cache, v_cache, cache_index=cache_index,
+                                block_k=block_k, interpret=interpret)

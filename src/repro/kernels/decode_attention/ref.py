@@ -1,0 +1,10 @@
+"""Oracle for flash-decode: the model's XLA decode path."""
+
+from __future__ import annotations
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, cache_index, window=None):
+    from repro.models.attention import decode_attention_xla
+
+    return decode_attention_xla(q, k_cache, v_cache, cache_index=cache_index,
+                                window=window)

@@ -1,0 +1,44 @@
+"""jit'd wrapper: Pallas forward AND backward kernels under custom_vjp.
+
+Forward saves only (q, k, v, out, lse); the backward runs the two-pass
+Pallas kernels (dq grid, then dk/dv grid) — flash-attention training is
+kernel-complete on TPU.  On CPU both directions run in interpret mode for
+the oracle tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_bwd, flash_attention_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret):
+    out, lse = flash_attention_fwd(q, k, v, causal=causal, block_q=block_q,
+                                   block_k=block_k, interpret=interpret,
+                                   return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v, out, lse = res
+    return flash_attention_bwd(q, k, v, out, lse, g, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=False):
+    """Differentiable flash attention (Pallas fwd + bwd kernels)."""
+    return _flash(q, k, v, causal, block_q, block_k, interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_naive(q, k, v, *, causal: bool = True):
+    """Materialized-scores reference. q: (B,Sq,H,D); k/v: (B,Skv,K,D[v])."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, Dv = v.shape
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskv->bqkgv", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv).astype(v.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, q_chunk=512,
+                      kv_chunk=1024):
+    """The chunked online-softmax implementation (shared with the model's
+    XLA path) — memory-bounded oracle for long sequences."""
+    from repro.models.attention import chunked_attention
+
+    return chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk)

@@ -1,0 +1,37 @@
+"""jit'd wrapper: Pallas selective scan fwd + recompute (chunked-ref) bwd."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .mamba_scan import mamba_scan_pallas
+from .ref import mamba_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _scan(x, dt, A, B, C, h0, interpret):
+    return mamba_scan_pallas(x, dt, A, B, C, h0=h0, interpret=interpret)
+
+
+def _fwd(x, dt, A, B, C, h0, interpret):
+    out = mamba_scan_pallas(x, dt, A, B, C, h0=h0, interpret=interpret)
+    return out, (x, dt, A, B, C, h0)
+
+
+def _bwd(interpret, res, g):
+    x, dt, A, B, C, h0 = res
+    _, vjp = jax.vjp(lambda *a: mamba_scan_ref(*a), x, dt, A, B, C, h0)
+    return vjp(g)
+
+
+_scan.defvjp(_fwd, _bwd)
+
+
+def mamba_scan(x, dt, A, B, C, h0=None, *, interpret: bool = False):
+    import jax.numpy as jnp
+
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2], A.shape[-1]), jnp.float32)
+    return _scan(x, dt, A, B, C, h0, interpret)

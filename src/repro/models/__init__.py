@@ -1,0 +1,2 @@
+from .common import BlockSpec, ModelConfig, MoEConfig, SSMConfig  # noqa: F401
+from .registry import SHAPES, ModelAPI, build, cell_applicable  # noqa: F401

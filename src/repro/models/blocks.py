@@ -1,0 +1,236 @@
+"""Block assembly and the scan-over-repeats layer stack.
+
+A model is ``cfg.pattern`` (a short tuple of BlockSpec) repeated
+``cfg.n_repeats`` times.  Parameters of each pattern position are stacked
+along a leading (n_repeats,) axis and the forward pass is a single
+``lax.scan`` — HLO stays O(|pattern|) for 72-layer models.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import BlockSpec, ModelConfig
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import mamba as mamba_mod
+from .layers import apply_dense_mlp, apply_norm, init_dense_mlp, init_norm
+from .moe import apply_moe, init_moe
+
+
+# --------------------------------------------------------------------- #
+# single block
+# --------------------------------------------------------------------- #
+def init_block(key, cfg: ModelConfig, spec: BlockSpec):
+    k1, k2 = jax.random.split(key)
+    p = {}
+    if spec.mixer == "attn":
+        p["mixer_norm"] = init_norm(cfg)
+        p["attn"] = (mla_mod.init_mla(k1, cfg) if cfg.attention == "mla"
+                     else attn_mod.init_attention(k1, cfg))
+    elif spec.mixer == "mamba":
+        p["mixer_norm"] = init_norm(cfg)
+        p["mamba"] = mamba_mod.init_mamba(k1, cfg)
+    if spec.mlp == "dense":
+        p["mlp_norm"] = init_norm(cfg)
+        p["mlp"] = init_dense_mlp(k2, cfg)
+    elif spec.mlp == "moe":
+        p["mlp_norm"] = init_norm(cfg)
+        p["moe"] = init_moe(k2, cfg)
+    return p
+
+
+def _window_for(cfg: ModelConfig, spec: BlockSpec, long_context: bool):
+    if spec.window is not None:
+        return spec.window
+    if long_context and spec.mixer == "attn" and cfg.long_context_window:
+        return cfg.long_context_window
+    return None
+
+
+def apply_block_train(p, x, cfg: ModelConfig, spec: BlockSpec, *,
+                      long_context=False, use_rope=True, causal=True,
+                      block_skip=False):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer == "attn":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        if cfg.attention == "mla":
+            h = mla_mod.apply_mla_train(p["attn"], h, cfg)
+        else:
+            h = attn_mod.apply_attention_train(
+                p["attn"], h, cfg, window=_window_for(cfg, spec, long_context),
+                use_rope=use_rope, causal=causal, block_skip=block_skip)
+        x = x + h
+    elif spec.mixer == "mamba":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        x = x + mamba_mod.apply_mamba_train(p["mamba"], h, cfg)
+    if spec.mlp == "dense":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_dense_mlp(p["mlp"], h, cfg)
+    elif spec.mlp == "moe":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        h, a = apply_moe(p["moe"], h, cfg)
+        x = x + h
+        aux = aux + a
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, seq_len: int):
+    c = {}
+    if spec.mixer == "attn":
+        c["attn"] = (mla_mod.make_empty_mla_cache(cfg, batch, seq_len)
+                     if cfg.attention == "mla"
+                     else attn_mod.make_empty_cache(cfg, batch, seq_len))
+    elif spec.mixer == "mamba":
+        c["mamba"] = mamba_mod.make_empty_mamba_state(cfg, batch)
+    return c
+
+
+def apply_block_prefill(p, x, cfg: ModelConfig, spec: BlockSpec, *,
+                        seq_budget: int, long_context=False):
+    """Like train but returns the cache. ``seq_budget``: cache length to
+    allocate (>= S; extra slots for subsequent decode)."""
+    cache = {}
+    if spec.mixer == "attn":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        if cfg.attention == "mla":
+            h, kv = mla_mod.apply_mla_prefill(p["attn"], h, cfg)
+            pad = seq_budget - x.shape[1]
+            kv = jax.tree_util.tree_map(
+                lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)), kv)
+        else:
+            h, kv = attn_mod.apply_attention_prefill(
+                p["attn"], h, cfg, window=_window_for(cfg, spec, long_context))
+            pad = seq_budget - x.shape[1]
+            kv = jax.tree_util.tree_map(
+                lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)), kv)
+        cache["attn"] = kv
+        x = x + h
+    elif spec.mixer == "mamba":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        # prefill for SSM: run the train path then recompute the final state
+        hh = h
+        di = cfg.d_inner
+        xz = hh @ p["mamba"]["in_proj"].astype(cfg.dtype)
+        xin, z = xz[..., :di], xz[..., di:]
+        xin_c, conv_tail = mamba_mod._causal_conv(p["mamba"], xin, cfg)
+        xin_c = jax.nn.silu(xin_c)
+        dt, Bm, Cm = mamba_mod._ssm_inputs(p["mamba"], xin_c, cfg)
+        A = -jnp.exp(p["mamba"]["A_log"])
+        from repro.kernels import mamba_scan_dispatch
+
+        y, h_final = mamba_scan_dispatch(xin_c.astype(jnp.float32), dt, A, Bm, Cm)
+        y = y + xin_c.astype(jnp.float32) * p["mamba"]["D"]
+        y = y.astype(cfg.dtype) * jax.nn.silu(z)
+        x = x + y @ p["mamba"]["out_proj"].astype(cfg.dtype)
+        cache["mamba"] = {"conv": conv_tail, "ssm": h_final}
+    if spec.mlp == "dense":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_dense_mlp(p["mlp"], h, cfg)
+    elif spec.mlp == "moe":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        h, _ = apply_moe(p["moe"], h, cfg)
+        x = x + h
+    return x, cache
+
+
+def apply_block_decode(p, x, cache, cfg: ModelConfig, spec: BlockSpec, *,
+                       cache_index, long_context=False):
+    if spec.mixer == "attn":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        if cfg.attention == "mla":
+            h, kv = mla_mod.apply_mla_decode(p["attn"], h, cache["attn"], cfg,
+                                             cache_index=cache_index)
+        else:
+            h, kv = attn_mod.apply_attention_decode(
+                p["attn"], h, cache["attn"], cfg, cache_index=cache_index,
+                window=_window_for(cfg, spec, long_context))
+        cache = dict(cache, attn=kv)
+        x = x + h
+    elif spec.mixer == "mamba":
+        h = apply_norm(p["mixer_norm"], x, cfg)
+        h, st = mamba_mod.apply_mamba_decode(p["mamba"], h, cache["mamba"], cfg)
+        cache = dict(cache, mamba=st)
+        x = x + h
+    if spec.mlp == "dense":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_dense_mlp(p["mlp"], h, cfg)
+    elif spec.mlp == "moe":
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        h, _ = apply_moe(p["moe"], h, cfg)
+        x = x + h
+    return x, cache
+
+
+# --------------------------------------------------------------------- #
+# stacked repeats
+# --------------------------------------------------------------------- #
+def init_blocks(key, cfg: ModelConfig):
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), cfg.n_repeats)
+        out[f"b{i}"] = jax.vmap(lambda k, s=spec: init_block(k, cfg, s))(keys)
+    return out
+
+
+def apply_blocks_train(params, x, cfg: ModelConfig, *, long_context=False,
+                       use_rope=True, causal=True, block_skip=False):
+    from repro.sharding.hints import shard_hint
+
+    def body(carry, layer_params):
+        x, aux = carry
+        # pin the layer-boundary (remat-saved) activation layout; the
+        # barrier also stops XLA from hoisting dtype converts of the whole
+        # saved stack out of the backward loop (a 2x-3x peak-memory bug).
+        x = shard_hint(x, "activations")
+        for i, spec in enumerate(cfg.pattern):
+            x, a = apply_block_train(
+                layer_params[f"b{i}"], x, cfg, spec, long_context=long_context,
+                use_rope=use_rope, causal=causal, block_skip=block_skip)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+    return x, aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    """Stacked (n_repeats leading axis) cache pytree."""
+    def one(spec):
+        c = init_block_cache(cfg, spec, batch, seq_len)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape), c)
+    return {f"b{i}": one(spec) for i, spec in enumerate(cfg.pattern)}
+
+
+def apply_blocks_prefill(params, x, cfg: ModelConfig, *, seq_budget,
+                         long_context=False):
+    def body(x, layer_params):
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c = apply_block_prefill(layer_params[f"b{i}"], x, cfg, spec,
+                                       seq_budget=seq_budget,
+                                       long_context=long_context)
+            caches[f"b{i}"] = c
+        return x, caches
+
+    return jax.lax.scan(body, x, params)
+
+
+def apply_blocks_decode(params, x, caches, cfg: ModelConfig, *, cache_index,
+                        long_context=False):
+    def body(x, inp):
+        layer_params, layer_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c = apply_block_decode(layer_params[f"b{i}"], x,
+                                      layer_cache[f"b{i}"], cfg, spec,
+                                      cache_index=cache_index,
+                                      long_context=long_context)
+            new_cache[f"b{i}"] = c
+        return x, new_cache
+
+    return jax.lax.scan(body, x, (params, caches))

@@ -1,0 +1,196 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d_model).  Sinusoidal
+positions, pre-LayerNorm, GELU MLPs.  Decoder blocks: causal self-attention
+(cached at decode), cross-attention over the encoder output (static cache),
+then MLP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, sinusoidal_positions
+from . import attention as attn_mod
+from .layers import (apply_dense_mlp, apply_embed, apply_norm, apply_unembed,
+                     cross_entropy_loss, init_dense_mlp, init_embed, init_norm)
+from repro.sharding.hints import shard_hint
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_norm(cfg),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "mlp_norm": init_norm(cfg),
+        "mlp": init_dense_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": init_norm(cfg),
+        "self_attn": attn_mod.init_attention(k1, cfg),
+        "cross_norm": init_norm(cfg),
+        "cross_attn": attn_mod.init_attention(k2, cfg),
+        "mlp_norm": init_norm(cfg),
+        "mlp": init_dense_mlp(k3, cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k1, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": init_embed(k3, cfg),  # decoder token embeddings (tied head)
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_final_norm": init_norm(cfg),
+        "dec_final_norm": init_norm(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, d) precomputed stub embeddings -> (B, S_enc, d)."""
+    x = frames.astype(cfg.dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, cfg.dtype)[None]
+
+    def body(x, p):
+        h = apply_norm(p["attn_norm"], x, cfg)
+        h = attn_mod.apply_attention_train(p["attn"], h, cfg, use_rope=False,
+                                           causal=False)
+        x = x + h
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        return x + apply_dense_mlp(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def _dec_embed(params, tokens, cfg, offset=0):
+    x = apply_embed(params["embed"], tokens, cfg)
+    pos = sinusoidal_positions(offset + tokens.shape[1], cfg.d_model, cfg.dtype)
+    return x + pos[None, offset:]
+
+
+def decoder_train(params, tokens, enc_out, cfg: ModelConfig):
+    x = _dec_embed(params, tokens, cfg)
+
+    def body(x, p):
+        h = apply_norm(p["self_norm"], x, cfg)
+        h = attn_mod.apply_attention_train(p["self_attn"], h, cfg,
+                                           use_rope=False, causal=True)
+        x = x + h
+        h = apply_norm(p["cross_norm"], x, cfg)
+        h = attn_mod.apply_attention_train(p["cross_attn"], h, cfg,
+                                           use_rope=False, kv=enc_out)
+        x = x + h
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        return x + apply_dense_mlp(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return apply_norm(params["dec_final_norm"], x, cfg)
+
+
+def forward_train(params, batch, cfg: ModelConfig, **_):
+    from .loss import fused_cross_entropy
+
+    enc_out = encode(params, batch["enc_frames"], cfg)
+    x = decoder_train(params, batch["tokens"], enc_out, cfg)
+    loss = fused_cross_entropy(x, params["embed"]["table"], batch["targets"],
+                               batch.get("loss_mask"))
+    return loss, {"ce_loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def forward_prefill(params, batch, cfg: ModelConfig, *, seq_budget=None, **_):
+    """Encode + run the decoder prompt, returning (last_logits, caches).
+    caches: self-attn KV per decoder layer + static cross KV."""
+    enc_out = encode(params, batch["enc_frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    seq_budget = seq_budget or S
+    x = _dec_embed(params, tokens, cfg)
+
+    def layer(x, p):
+        h = apply_norm(p["self_norm"], x, cfg)
+        hd = cfg.head_dim
+        dt = cfg.dtype
+        q = (h @ p["self_attn"]["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+        k = (h @ p["self_attn"]["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (h @ p["self_attn"]["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+        from repro.kernels import flash_attention_dispatch
+
+        o = flash_attention_dispatch(q, k, v, causal=True)
+        o = o.reshape(B, S, cfg.n_heads * hd) @ p["self_attn"]["wo"].astype(dt)
+        x = x + o
+        pad = seq_budget - S
+        kv_cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+        h = apply_norm(p["cross_norm"], x, cfg)
+        kc = (enc_out @ p["cross_attn"]["wk"].astype(dt)).reshape(
+            B, enc_out.shape[1], cfg.n_kv_heads, hd)
+        vc = (enc_out @ p["cross_attn"]["wv"].astype(dt)).reshape(
+            B, enc_out.shape[1], cfg.n_kv_heads, hd)
+        qh = (h @ p["cross_attn"]["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+        o = flash_attention_dispatch(qh, kc, vc, causal=False)
+        o = o.reshape(B, S, cfg.n_heads * hd) @ p["cross_attn"]["wo"].astype(dt)
+        x = x + o
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_dense_mlp(p["mlp"], h, cfg)
+        return x, {"self": kv_cache, "cross": {"k": kc, "v": vc}}
+
+    x, caches = jax.lax.scan(layer, x, params["decoder"])
+    x = apply_norm(params["dec_final_norm"], x, cfg)
+    logits = shard_hint(apply_unembed(params["embed"], x[:, -1:], cfg), "logits")
+    return logits[:, 0], caches
+
+
+def decode_step(params, batch, caches, cfg: ModelConfig, *, cache_index, **_):
+    """One decoder token against self-KV cache + cross-KV cache."""
+    tokens = batch["tokens"]  # (B,1)
+    B = tokens.shape[0]
+    # sinusoidal position at the (dynamic) cache_index
+    import math as _math
+
+    half = cfg.d_model // 2
+    inv = jnp.exp(-(_math.log(10000.0) / max(half - 1, 1))
+                  * jnp.arange(half, dtype=jnp.float32))
+    ang = jnp.asarray(cache_index, jnp.float32) * inv
+    pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(cfg.dtype)
+    x = apply_embed(params["embed"], tokens, cfg) + pos[None, None]
+
+    def layer(x, inp):
+        p, c = inp
+        h = apply_norm(p["self_norm"], x, cfg)
+        h, kv = attn_mod.apply_attention_decode(p["self_attn"], h, c["self"],
+                                                cfg, cache_index=cache_index,
+                                                use_rope=False)
+        x = x + h
+        h = apply_norm(p["cross_norm"], x, cfg)
+        h, _ = attn_mod.apply_attention_decode(p["cross_attn"], h, c["cross"],
+                                               cfg, cache_index=0,
+                                               kv_cross=True)
+        x = x + h
+        h = apply_norm(p["mlp_norm"], x, cfg)
+        x = x + apply_dense_mlp(p["mlp"], h, cfg)
+        return x, {"self": kv, "cross": c["cross"]}
+
+    x, caches = jax.lax.scan(layer, x, (params["decoder"], caches))
+    x = apply_norm(params["dec_final_norm"], x, cfg)
+    logits = shard_hint(apply_unembed(params["embed"], x, cfg), "logits")
+    return logits[:, 0], caches
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    L = cfg.n_layers
+    kv = lambda s: {  # noqa: E731
+        "k": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+    return {"self": kv(seq_len), "cross": kv(cfg.encoder_seq_len)}

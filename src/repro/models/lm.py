@@ -1,0 +1,100 @@
+"""Decoder-only LM (and VLM-backbone) built from the block stack.
+
+Public entry points (all pure functions over params pytrees):
+  init_lm            -> params
+  forward_train      -> (loss, metrics)       [train_* shapes]
+  forward_prefill    -> (last_logits, caches) [prefill_* shapes]
+  decode_step        -> (logits, new_caches)  [decode_* / long_* shapes]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .blocks import (apply_blocks_decode, apply_blocks_prefill,
+                     apply_blocks_train, init_blocks, init_caches)
+from .layers import (apply_embed, apply_norm, apply_unembed,
+                     cross_entropy_loss, dense_init, init_embed, init_norm)
+from .loss import fused_cross_entropy
+from repro.sharding.hints import shard_hint
+
+
+def init_lm(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "embed": init_embed(k1, cfg),
+        "blocks": init_blocks(k2, cfg),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embed(k3, cfg)
+    if cfg.frontend == "vision":
+        # stub projection for precomputed patch embeddings
+        p["patch_proj"] = {"w": dense_init(k4, (cfg.d_model, cfg.d_model),
+                                           dtype=cfg.pdtype)}
+    return p
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    x = apply_embed(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.dtype) @ params["patch_proj"]["w"].astype(cfg.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = apply_unembed(table, x, cfg)
+    return shard_hint(logits, "logits")
+
+
+def forward_train(params, batch, cfg: ModelConfig, *, long_context=False,
+                  block_skip=False):
+    """batch: tokens (B,S) int32, targets (B,S) int32 [, loss_mask (B,S),
+    patch_embeds (B,P,d)]. Returns (scalar loss fp32, metrics dict)."""
+    x = _embed_inputs(params, batch, cfg)
+    x = shard_hint(x, "activations")
+    x, aux = apply_blocks_train(params["blocks"], x, cfg,
+                                long_context=long_context,
+                                block_skip=block_skip)
+    x = apply_norm(params["final_norm"], x, cfg)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:]  # loss on text positions only
+    table = (params["embed"] if cfg.tie_embeddings else params["lm_head"])["table"]
+    loss = fused_cross_entropy(x, table, batch["targets"],
+                               batch.get("loss_mask"))
+    total = loss + aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def forward_prefill(params, batch, cfg: ModelConfig, *, seq_budget=None,
+                    long_context=False):
+    """Returns (last-token logits (B,V), caches)."""
+    x = _embed_inputs(params, batch, cfg)
+    x = shard_hint(x, "activations")
+    seq_budget = max(seq_budget or 0, x.shape[1])
+    x, caches = apply_blocks_prefill(params["blocks"], x, cfg,
+                                     seq_budget=seq_budget,
+                                     long_context=long_context)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _unembed(params, x[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, batch, caches, cfg: ModelConfig, *, cache_index,
+                long_context=False):
+    """batch: tokens (B,1). Returns (logits (B,V), new caches)."""
+    x = _embed_inputs(params, batch, cfg)
+    x, caches = apply_blocks_decode(params["blocks"], x, caches, cfg,
+                                    cache_index=cache_index,
+                                    long_context=long_context)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0], caches
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    return init_caches(cfg, batch, seq_len)

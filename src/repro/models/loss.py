@@ -1,0 +1,102 @@
+"""Chunked softmax cross-entropy with a manual backward.
+
+Materializing (B, S, V) fp32 logits for a 150k vocab at batch 256 x 4096 is
+~10 GiB/device *per buffer* (logits, dlogits, softmax temporaries).  This
+computes the loss seq-chunk by seq-chunk in the forward and *recomputes*
+each chunk's softmax in the backward (dx = (p - onehot) @ W per chunk),
+so no (B, S, V) tensor ever exists.  FLOP count is identical to the naive
+path; peak memory drops by O(S/chunk).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunks(S: int, target: int = 256) -> int:
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _chunk_logits(xc, table):
+    # xc: (B,c,d) compute dtype; table: (V,d).  fp32 logits.
+    return jnp.einsum("bcd,vd->bcv", xc.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def token_nll(x, table, targets, chunk=256):
+    """Per-token negative log likelihood.
+
+    x: (B,S,d) final hidden states; table: (V,d) unembedding; targets (B,S).
+    Returns (B,S) fp32 nll."""
+    nll, _ = _nll_fwd_impl(x, table, targets, chunk)
+    return nll
+
+
+def _nll_fwd_impl(x, table, targets, chunk):
+    B, S, d = x.shape
+    c = _chunks(S, chunk)
+    n = S // c
+    xb = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, n, c).transpose(1, 0, 2)
+
+    def step(_, inp):
+        xc, tc = inp
+        logits = _chunk_logits(xc, table)  # (B,c,V)
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return None, lse - gold
+
+    _, nll = jax.lax.scan(step, None, (xb, tb))
+    return nll.transpose(1, 0, 2).reshape(B, S), None
+
+
+def _nll_fwd(x, table, targets, chunk):
+    nll, _ = _nll_fwd_impl(x, table, targets, chunk)
+    return nll, (x, table, targets)
+
+
+def _nll_bwd(chunk, res, g):
+    x, table, targets = res
+    B, S, d = x.shape
+    V = table.shape[0]
+    c = _chunks(S, chunk)
+    n = S // c
+    xb = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, n, c).transpose(1, 0, 2)
+    gb = g.reshape(B, n, c).transpose(1, 0, 2).astype(jnp.float32)
+
+    def step(dtable, inp):
+        xc, tc, gc = inp
+        logits = _chunk_logits(xc, table)
+        p = jax.nn.softmax(logits, axis=-1)  # (B,c,V)
+        onehot = jax.nn.one_hot(tc, V, dtype=jnp.float32)
+        dl = (p - onehot) * gc[..., None]  # dnll/dlogits * g
+        dx = jnp.einsum("bcv,vd->bcd", dl, table.astype(jnp.float32))
+        dtable = dtable + jnp.einsum("bcv,bcd->vd", dl,
+                                     xc.astype(jnp.float32))
+        return dtable, dx
+
+    dtable0 = jnp.zeros((V, d), jnp.float32)
+    dtable, dxb = jax.lax.scan(step, dtable0, (xb, tb, gb))
+    dx = dxb.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return dx, dtable.astype(table.dtype), None
+
+
+token_nll.defvjp(_nll_fwd, _nll_bwd)
+
+
+def fused_cross_entropy(x, table, targets, mask=None, *, chunk: int = 256):
+    """Mean-token CE over (possibly masked) targets, chunked end to end."""
+    nll = token_nll(x, table, targets, chunk)
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(nll.dtype)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

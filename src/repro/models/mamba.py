@@ -1,0 +1,115 @@
+"""Mamba-1 selective state-space block (falcon-mamba / jamba mamba layers).
+
+Training uses a *chunked* selective scan: an outer ``lax.scan`` over sequence
+chunks carrying the SSM state, with an associative scan inside each chunk —
+this bounds the materialized (B, chunk, d_inner, state) tensors instead of
+the O(seq) blow-up of a naive associative scan over the whole sequence.
+The Pallas kernel in ``repro.kernels.mamba_scan`` implements the same
+chunking with the state resident in VMEM.
+
+Decode keeps (conv_state, ssm_state) per layer — O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import dense_init
+
+
+def init_mamba(key, cfg: ModelConfig):
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    dtr = s.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (di, s.state_dim))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, di)) * (s.conv_width**-0.5)
+                   ).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * s.state_dim), dtype=cfg.pdtype),
+        "dt_proj_w": dense_init(ks[3], (dtr, di), dtype=cfg.pdtype),
+        "dt_proj_b": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,)) * (0.1 - 1e-3) + 1e-3,
+                     1e-4, None))).astype(cfg.pdtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), in_axis_size=di, dtype=cfg.pdtype),
+    }
+
+
+def _ssm_inputs(p, xz, cfg: ModelConfig):
+    """From conv'd activations (B,S,di) -> (dt, B, C) fp32."""
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    proj = xz @ p["x_proj"].astype(cfg.dtype)  # (B,S,dtr+2n)
+    dt_r, Bc = proj[..., :dtr], proj[..., dtr:]
+    Bmat, Cmat = Bc[..., : s.state_dim], Bc[..., s.state_dim:]
+    dt = dt_r @ p["dt_proj_w"].astype(cfg.dtype) + p["dt_proj_b"].astype(cfg.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,di)
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def _causal_conv(p, x, cfg: ModelConfig, conv_state=None):
+    """Depthwise causal conv1d. x: (B,S,di). conv_state: (B,W-1,di) history."""
+    W = cfg.ssm.conv_width
+    w = p["conv_w"].astype(cfg.dtype)  # (W, di)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, di)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out + p["conv_b"].astype(cfg.dtype), new_state
+
+
+def apply_mamba_train(p, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"].astype(cfg.dtype)  # (B,S,2di)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin, _ = _causal_conv(p, xin, cfg)
+    xin = jax.nn.silu(xin)
+    dt, Bm, Cm = _ssm_inputs(p, xin, cfg)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    from repro.kernels import mamba_scan_dispatch
+
+    y, _ = mamba_scan_dispatch(xin.astype(jnp.float32), dt, A, Bm, Cm)
+    y = y + xin.astype(jnp.float32) * p["D"]
+    y = (y.astype(cfg.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cfg.dtype)
+
+
+def apply_mamba_decode(p, x, state, cfg: ModelConfig):
+    """One token. x: (B,1,d); state: {"conv": (B,W-1,di), "ssm": (B,di,n)}."""
+    B = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm.state_dim
+    xz = x @ p["in_proj"].astype(cfg.dtype)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin, conv_state = _causal_conv(p, xin, cfg, conv_state=state["conv"])
+    xin = jax.nn.silu(xin)
+    dt, Bm, Cm = _ssm_inputs(p, xin, cfg)  # (B,1,di),(B,1,n),(B,1,n)
+    A = -jnp.exp(p["A_log"])  # (di,n)
+    dt0, B0, C0 = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    dA = jnp.exp(dt0[..., None] * A)  # (B,di,n)
+    dB = dt0[..., None] * B0[:, None, :]  # (B,di,n)
+    h = state["ssm"] * dA + dB * xin.astype(jnp.float32)[:, 0, :, None]
+    y = jnp.einsum("bdn,bn->bd", h, C0) + xin.astype(jnp.float32)[:, 0] * p["D"]
+    y = y[:, None].astype(cfg.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cfg.dtype)
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def make_empty_mamba_state(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm.state_dim), jnp.float32),
+    }

@@ -1,0 +1,118 @@
+"""Model registry: uniform API over all assigned architectures.
+
+``build(cfg)`` returns a ``ModelAPI`` whose members are pure functions
+suitable for jit/pjit and for AOT ``.lower()`` against ShapeDtypeStructs
+(``input_specs``/``cache_specs`` provide the stand-ins; nothing allocates).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from . import encdec, lm
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode", 32768, 128),
+    "long_500k": ShapeCell("decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the assignment's skip rules."""
+    if shape_name == "long_500k":
+        if not cfg.subquadratic:
+            return False, ("pure full-attention arch: O(s^2) attention at "
+                           "524288 has no sub-quadratic mechanism; skipped "
+                           "per assignment")
+    return True, ""
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    make_caches: Callable[[int, int], Any]
+
+    # ------------------------------------------------------------- #
+    def input_specs(self, shape_name: str, *, batch_override: int | None = None
+                    ) -> dict[str, jax.ShapeDtypeStruct]:
+        cell = SHAPES[shape_name]
+        B = batch_override or cell.global_batch
+        S = cell.seq_len
+        cfg = self.cfg
+        i32, f = jnp.int32, cfg.dtype
+        sds = jax.ShapeDtypeStruct
+        if cell.kind == "train":
+            if cfg.is_encoder_decoder:
+                return {"enc_frames": sds((B, S, cfg.d_model), f),
+                        "tokens": sds((B, S), i32),
+                        "targets": sds((B, S), i32)}
+            if cfg.frontend == "vision":
+                P = cfg.n_patch_tokens
+                return {"tokens": sds((B, S - P), i32),
+                        "patch_embeds": sds((B, P, cfg.d_model), f),
+                        "targets": sds((B, S - P), i32)}
+            return {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+        if cell.kind == "prefill":
+            base = {"tokens": sds((B, S), i32)}
+            if cfg.is_encoder_decoder:
+                base["enc_frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model), f)
+            if cfg.frontend == "vision":
+                P = cfg.n_patch_tokens
+                base["tokens"] = sds((B, S - P), i32)
+                base["patch_embeds"] = sds((B, P, cfg.d_model), f)
+            return base
+        # decode: one new token against a seq_len cache
+        base = {"tokens": sds((B, 1), i32),
+                "cache_index": sds((), i32)}
+        return base
+
+    def cache_specs(self, shape_name: str, *, batch_override: int | None = None):
+        cell = SHAPES[shape_name]
+        assert cell.kind == "decode"
+        B = batch_override or cell.global_batch
+        return jax.eval_shape(lambda: self.make_caches(B, cell.seq_len))
+
+    def param_specs(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encoder_decoder:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            train_loss=lambda p, b, **kw: encdec.forward_train(p, b, cfg, **kw),
+            prefill=lambda p, b, **kw: encdec.forward_prefill(p, b, cfg, **kw),
+            decode=lambda p, b, c, **kw: encdec.decode_step(
+                p, b, c, cfg, cache_index=b["cache_index"], **kw),
+            make_caches=lambda bsz, s: encdec.make_decode_caches(cfg, bsz, s),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: lm.init_lm(key, cfg),
+        train_loss=lambda p, b, **kw: lm.forward_train(p, b, cfg, **kw),
+        prefill=lambda p, b, **kw: lm.forward_prefill(p, b, cfg, **kw),
+        decode=lambda p, b, c, long_context=False, **kw: lm.decode_step(
+            p, b, c, cfg, cache_index=b["cache_index"],
+            long_context=long_context, **kw),
+        make_caches=lambda bsz, s: lm.make_decode_caches(cfg, bsz, s),
+    )

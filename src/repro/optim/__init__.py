@@ -1,0 +1,4 @@
+from .adamw import (adamw_update, clip_by_global_norm, global_norm,  # noqa: F401
+                    init_opt_state, opt_state_partition_specs,
+                    quantize_blockwise, dequantize_blockwise)
+from .schedules import SCHEDULES, constant, warmup_cosine, wsd  # noqa: F401

@@ -1,0 +1,204 @@
+"""AdamW with configurable moment dtypes: fp32 | bf16 | int8-blockwise.
+
+Why: the 398-480B assigned architectures cannot hold fp32 Adam moments on a
+single 256-chip v5e pod (4 TiB HBM).  bf16 moments halve that; blockwise
+int8 (bitsandbytes-style: int8 code + fp32 absmax per 256-element block of
+the last axis) quarters it.  The moment trees mirror the parameter tree, so
+the same path-based partition rules shard them.
+
+Also here: global-norm gradient clipping and decoupled weight decay.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+# ----------------------- int8 blockwise codec -------------------------- #
+def _pad_to_block(x):
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, pad
+
+
+_LOG_EPS = 1e-30
+
+
+def quantize_blockwise(x: jnp.ndarray, *, log_domain: bool = False):
+    """fp32 -> (int8 codes, fp32 scale, fp32 offset) per 256-elem block.
+
+    ``log_domain=True`` quantizes log(x) with a per-block [lo, hi] range —
+    needed for Adam's second moment, where linear absmax codes collapse the
+    small entries in a block to zero and m/sqrt(v) explodes."""
+    xp, _ = _pad_to_block(x.astype(jnp.float32))
+    shape = xp.shape[:-1] + (xp.shape[-1] // BLOCK, BLOCK)
+    xb = xp.reshape(shape)
+    if log_domain:
+        u = jnp.log(jnp.maximum(xb, _LOG_EPS))
+        lo = jnp.min(u, axis=-1)
+        hi = jnp.max(u, axis=-1)
+        scale = jnp.maximum(hi - lo, 1e-6) / 254.0
+        codes = jnp.clip(jnp.round((u - lo[..., None]) / scale[..., None]) - 127,
+                         -127, 127).astype(jnp.int8)
+        return codes.reshape(xp.shape), scale, lo
+    absmax = jnp.max(jnp.abs(xb), axis=-1)  # (..., nblocks)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return codes.reshape(xp.shape), scale, jnp.zeros_like(scale)
+
+
+def dequantize_blockwise(codes: jnp.ndarray, scale: jnp.ndarray,
+                         offset: jnp.ndarray, orig_last: int, *,
+                         log_domain: bool = False):
+    shape = codes.shape[:-1] + (codes.shape[-1] // BLOCK, BLOCK)
+    cb = codes.reshape(shape).astype(jnp.float32)
+    if log_domain:
+        u = (cb + 127.0) * scale[..., None] + offset[..., None]
+        xb = jnp.exp(u)
+        xb = jnp.where(xb <= 2 * _LOG_EPS, 0.0, xb)
+    else:
+        xb = cb * scale[..., None]
+    x = xb.reshape(codes.shape)
+    return x[..., :orig_last]
+
+
+# ----------------------------- state ---------------------------------- #
+def _zeros_like_moment(p, dtype: str):
+    if dtype == "int8":
+        pp, _ = _pad_to_block(p)
+        codes = jnp.zeros(pp.shape, jnp.int8)
+        scale = jnp.zeros(pp.shape[:-1] + (pp.shape[-1] // BLOCK,), jnp.float32)
+        return {"codes": codes, "scale": scale,
+                "offset": jnp.full_like(scale, jnp.log(_LOG_EPS))}
+    return jnp.zeros(p.shape, jnp.dtype(dtype))
+
+
+def init_opt_state(params, *, moment_dtype: str = "float32",
+                   master_fp32: bool = False) -> dict:
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(
+            partial(_zeros_like_moment, dtype=moment_dtype), params),
+        "v": jax.tree_util.tree_map(
+            partial(_zeros_like_moment, dtype=moment_dtype), params),
+    }
+    if master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _read_moment(mom, p, dtype: str, *, log_domain: bool = False):
+    if dtype == "int8":
+        return dequantize_blockwise(mom["codes"], mom["scale"], mom["offset"],
+                                    p.shape[-1], log_domain=log_domain)
+    return mom.astype(jnp.float32)
+
+
+def _write_moment(val, dtype: str, *, log_domain: bool = False):
+    if dtype == "int8":
+        codes, scale, offset = quantize_blockwise(val, log_domain=log_domain)
+        return {"codes": codes, "scale": scale, "offset": offset}
+    return val.astype(jnp.dtype(dtype))
+
+
+# ----------------------------- update --------------------------------- #
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, moment_dtype="float32",
+                 clip_norm: float | None = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(g, m, v, p, master):
+        g32 = g.astype(jnp.float32)
+        m32 = _read_moment(m, p, moment_dtype)
+        v32 = _read_moment(v, p, moment_dtype, log_domain=True)
+        m32 = b1 * m32 + (1 - b1) * g32
+        v32 = b2 * v32 + (1 - b2) * g32 * g32
+        mh = m32 / c1
+        vh = v32 / c2
+        base = master.astype(jnp.float32)
+        new = base - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * base)
+        return (new, _write_moment(m32, moment_dtype),
+                _write_moment(v32, moment_dtype, log_domain=True))
+
+    keep_master = "master" in state
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    flat_master = treedef.flatten_up_to(masters)
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for g, m, v, p, ms in zip(flat_g, flat_m, flat_v, flat_p, flat_master):
+        ni, nm, nv = upd(g, m, v, p, ms)
+        p_out = ni.astype(p.dtype)
+        ms_out = ni if keep_master else p_out
+        new_master.append(ms_out)
+        new_p.append(p_out)
+        new_m.append(nm)
+        new_v.append(nv)
+
+    new_state = {
+        "step": step,
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+    }
+    if "master" in state:
+        new_state["master"] = jax.tree_util.tree_unflatten(treedef, new_master)
+    params_out = jax.tree_util.tree_unflatten(treedef, new_p)
+    metrics["lr"] = jnp.asarray(lr, jnp.float32)
+    return params_out, new_state, metrics
+
+
+def opt_state_partition_specs(state, param_specs, axes,
+                              axis_sizes: dict | None = None):
+    """Moment trees mirror params -> reuse param specs; int8 moments carry
+    {codes, scale, offset} whose specs derive from the same param spec
+    (sanitized: the blocked last dim usually cannot divide the mesh)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.specs import sanitize_spec
+
+    def mom_spec(spec, leaf):
+        if isinstance(leaf, dict):  # int8 {codes, scale, offset}
+            return {k: sanitize_spec(spec, leaf[k].shape, axis_sizes)
+                    for k in ("codes", "scale", "offset")}
+        return sanitize_spec(spec, leaf.shape, axis_sizes)
+
+    def tree_for(mom_tree):
+        return jax.tree_util.tree_map(
+            mom_spec, param_specs, mom_tree,
+            is_leaf=lambda x: isinstance(x, dict) and "codes" in x)
+
+    out = {"step": P(), "m": tree_for(state["m"]), "v": tree_for(state["v"])}
+    if "master" in state:
+        out["master"] = param_specs
+    return out

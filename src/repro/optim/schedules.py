@@ -1,0 +1,40 @@
+"""LR schedules: linear warmup + {cosine, WSD}.
+
+WSD (Warmup-Stable-Decay) is MiniCPM's schedule (arXiv:2404.06395):
+constant LR after warmup for the 'stable' phase, then a short decay tail —
+the schedule the assigned minicpm-2b was trained with."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, min_ratio: float = 0.1):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish linear tail)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    d = (step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1)
+    d = jnp.clip(d, 0.0, 1.0)
+    decay = peak_lr * (min_ratio ** d)  # exponential decay tail
+    out = jnp.where(step < warmup_steps, warm,
+                    jnp.where(step < warmup_steps + stable_steps,
+                              peak_lr, decay))
+    return out
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}

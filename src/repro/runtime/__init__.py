@@ -1,0 +1,1 @@
+from .train_loop import TrainConfig, Trainer, make_train_step, make_train_state  # noqa: F401

@@ -1,0 +1,75 @@
+"""Elastic re-meshing: surviving pod/slice loss at the SPMD layer.
+
+JJPF handles *task-level* faults by rescheduling; this module handles the
+*SPMD-level* fault "a pod (or slice of it) disappeared": rebuild the largest
+viable mesh from the surviving devices and resume from the latest
+checkpoint.  With deterministic data (batches are functions of step), the
+resumed run is exact: a restart re-executes the lost step(s), nothing is
+silently skipped.
+
+Policy: keep the "model" axis as requested if enough devices survive
+(tensor-parallel degree is a property of the weights' layout), shrink the
+"data"/"pod" axes.  Global batch is preserved (per-device batch grows), so
+the optimizer trajectory is unchanged across re-meshing.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def viable_mesh_shape(n_devices: int, *, model: int, prefer_pods: int = 1
+                      ) -> tuple[int, ...]:
+    """Largest (pod, data, model) with pod*data*model <= n_devices, model
+    fixed; the pod axis is kept at ``prefer_pods`` when the survivors still
+    divide into that many pods (pod-level fault domains are preserved),
+    otherwise it collapses; data shrinks to the largest power-of-2."""
+    if n_devices < model:
+        raise ValueError(
+            f"cannot keep model={model} with only {n_devices} devices")
+    rest = n_devices // model
+    pods = prefer_pods
+    while pods > 1 and rest % pods:
+        pods -= 1
+    data = rest // pods
+    # shrink data to a power of two for clean batch splits
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    return (pods, d, model) if pods > 1 else (d, model)
+
+
+def make_elastic_mesh(shape: tuple[int, ...], devices=None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    n = int(np.prod(shape))
+    if n > len(devices):
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    axes = ("pod", "data", "model")[-len(shape):]
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+class PodFailureDetector:
+    """Heartbeat-based liveness for pods (services).  In-process stand-in
+    for a fleet health service: pods publish heartbeats; the controller
+    declares a pod dead after ``timeout_s`` silence and triggers re-meshing."""
+
+    def __init__(self, pod_ids, *, timeout_s: float = 5.0, clock=None):
+        import time
+
+        self._clock = clock or time.monotonic
+        self.timeout_s = timeout_s
+        self._last = {p: self._clock() for p in pod_ids}
+
+    def heartbeat(self, pod_id) -> None:
+        self._last[pod_id] = self._clock()
+
+    def dead_pods(self) -> list:
+        now = self._clock()
+        return [p for p, t in self._last.items() if now - t > self.timeout_s]
+
+    def alive_pods(self) -> list:
+        now = self._clock()
+        return [p for p, t in self._last.items() if now - t <= self.timeout_s]

@@ -1,0 +1,73 @@
+"""Serving as a task farm — the paper's workload, verbatim.
+
+Batched generation requests are *embarrassingly parallel*: each task is
+(prompt batch -> generated tokens), no cross-task state.  The farm:
+
+    program  = prefill + N decode steps (ONE jit program per task)
+    services = pods running the compiled program
+    client   = BasicClient / FarmExecutor with pull scheduling, elastic
+               recruitment and rescheduling of failed requests
+
+This module builds the per-task generation program for any registry model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BasicClient, FarmExecutor, Program
+from repro.models.registry import ModelAPI
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 8
+    prompt_len: int = 16
+    batch_per_task: int = 4
+    greedy: bool = True
+
+
+def make_generate_program(api: ModelAPI, sc: ServeConfig, params) -> Program:
+    """payload: {"tokens": (B, prompt_len)} -> {"generated": (B, N)}.
+
+    ``params`` are closed over (weights are resident on the service; the
+    task payload is only the request batch — matching JJPF, where the
+    program ships once at recruit time and tasks stay small)."""
+    cfg = api.cfg
+    budget = sc.prompt_len + sc.max_new_tokens
+
+    def generate(payload):
+        tokens = payload["tokens"]
+        B = tokens.shape[0]
+        logits, caches = api.prefill(params, payload, seq_budget=budget)
+
+        def step(carry, i):
+            logits, caches = carry
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            batch = {"tokens": nxt, "cache_index": sc.prompt_len + i}
+            logits, caches = api.decode(params, batch, caches)
+            return (logits, caches), nxt[:, 0]
+
+        (_, _), toks = jax.lax.scan(step, (logits, caches),
+                                    jnp.arange(sc.max_new_tokens))
+        return {"generated": toks.T}  # (B, N)
+
+    return Program(generate, name=f"generate[{cfg.name}]")
+
+
+def serve_requests(api: ModelAPI, params, prompts, sc: ServeConfig, *,
+                   lookup, timeout: float = 300.0):
+    """Partition ``prompts`` (N, prompt_len) into farm tasks and run them."""
+    program = make_generate_program(api, sc, params)
+    n = prompts.shape[0]
+    bs = sc.batch_per_task
+    tasks = [{"tokens": jnp.asarray(prompts[i:i + bs])}
+             for i in range(0, n, bs)]
+    out: list = []
+    client = BasicClient(program, None, tasks, out, lookup=lookup)
+    client.compute(timeout=timeout)
+    gen = jnp.concatenate([o["generated"] for o in out], axis=0)
+    return gen, client.stats()

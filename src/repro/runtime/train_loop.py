@@ -1,0 +1,158 @@
+"""Synchronous pjit training (the per-pod / multi-pod SPMD step).
+
+``make_train_step`` builds the jit-able ``train_step(state, batch)`` that the
+multi-pod dry-run lowers: forward + backward + AdamW under the path-based
+partition rules, with optional microbatch gradient accumulation.
+
+``Trainer`` is the restartable driver: checkpoint/restore, deterministic
+data (a rescheduled/restarted step re-reads identical batches), periodic
+async checkpoints — the fault-tolerance substrate that JJPF farm-mode
+training composes with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+from repro.optim import adamw_update, init_opt_state
+from repro.optim.schedules import SCHEDULES
+from repro.sharding.hints import mesh_axes
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    accum_steps: int = 1
+    master_fp32: bool = False
+    seed: int = 0
+    # schedule extras (wsd)
+    stable_steps: int = 0
+    decay_steps: int = 100
+
+
+def make_lr_fn(tc: TrainConfig) -> Callable:
+    sched = SCHEDULES[tc.schedule]
+    if tc.schedule == "wsd":
+        return partial(sched, peak_lr=tc.lr, warmup_steps=tc.warmup_steps,
+                       stable_steps=tc.stable_steps, decay_steps=tc.decay_steps)
+    if tc.schedule == "cosine":
+        return partial(sched, peak_lr=tc.lr, warmup_steps=tc.warmup_steps,
+                       total_steps=tc.total_steps)
+    return partial(sched, peak_lr=tc.lr)
+
+
+def make_train_state(api: ModelAPI, tc: TrainConfig):
+    """Initialize {params, opt} (use under jit/out_shardings for big models)."""
+    params = api.init(jax.random.PRNGKey(tc.seed))
+    opt = init_opt_state(params, moment_dtype=api.cfg.opt_state_dtype,
+                         master_fp32=tc.master_fp32)
+    return {"params": params, "opt": opt}
+
+
+def make_train_step(api: ModelAPI, tc: TrainConfig, *, axes=None,
+                    block_skip: bool = False) -> Callable:
+    lr_fn = make_lr_fn(tc)
+    cfg = api.cfg
+
+    def loss_fn(params, batch):
+        loss, metrics = api.train_loss(params, batch, block_skip=block_skip)
+        return loss, metrics
+
+    def train_step(state, batch):
+        with mesh_axes(axes):
+            params, opt = state["params"], state["opt"]
+            if tc.accum_steps <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                a = tc.accum_steps
+
+                def micro(carry, mb):
+                    gsum, lsum = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                    gsum = jax.tree_util.tree_map(
+                        lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                    return (gsum, lsum + l), None
+
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch)
+                gz = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(micro, (gz, 0.0), mbs)
+                grads = jax.tree_util.tree_map(lambda g: g / a, grads)
+                loss = loss / a
+                metrics = {}
+            lr = lr_fn(opt["step"])
+            new_params, new_opt, opt_metrics = adamw_update(
+                grads, opt, params, lr=lr, b1=tc.b1, b2=tc.b2,
+                weight_decay=tc.weight_decay,
+                moment_dtype=cfg.opt_state_dtype, clip_norm=tc.clip_norm)
+            out_metrics = {"loss": loss, **metrics, **opt_metrics}
+            return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+class Trainer:
+    """Restartable single-controller training driver."""
+
+    def __init__(self, api: ModelAPI, tc: TrainConfig, dataset, *,
+                 checkpointer=None, ckpt_every: int = 50,
+                 train_step: Callable | None = None,
+                 state: Any | None = None):
+        self.api = api
+        self.tc = tc
+        self.dataset = dataset
+        self.checkpointer = checkpointer
+        self.ckpt_every = ckpt_every
+        self.train_step = jax.jit(train_step or make_train_step(api, tc))
+        self.state = state if state is not None else make_train_state(api, tc)
+        self.start_step = 0
+        self.metrics_log: list[dict] = []
+        if checkpointer is not None:
+            restored = checkpointer.restore_latest(self.state)
+            if restored is not None and restored[0] is not None:
+                self.start_step, self.state = restored
+
+    def run(self, n_steps: int, *, preempt_at: int | None = None) -> list[dict]:
+        """Run steps [start_step, start_step + n_steps). ``preempt_at``
+        simulates a node loss by raising after saving nothing (the restart
+        test path)."""
+        step = self.start_step
+        end = step + n_steps
+        while step < end:
+            if preempt_at is not None and step >= preempt_at:
+                raise KeyboardInterrupt(f"simulated preemption at step {step}")
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.dataset.batch_at(step).items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self.train_step(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["step_time_s"] = time.perf_counter() - t0
+            self.metrics_log.append(metrics)
+            step += 1
+            if self.checkpointer is not None and step % self.ckpt_every == 0:
+                self.checkpointer.save(step, self.state)
+                self.start_step = step
+        if self.checkpointer is not None:
+            self.checkpointer.save(step, self.state)
+            if hasattr(self.checkpointer, "wait"):
+                self.checkpointer.wait()
+        self.start_step = step
+        return self.metrics_log

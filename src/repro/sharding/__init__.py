@@ -1,0 +1,1 @@
+from . import hints, specs  # noqa: F401

@@ -1,0 +1,234 @@
+"""Path-based partition rules (the GSPMD layout policy).
+
+Strategy (TPU v5e pod, mesh axes ("pod","data","model")):
+  * weights: tensor-parallel dim over "model", FSDP dim over "data",
+    replicated over "pod" (pods are JJPF services; they sync gradients, or
+    nothing at all in farm-mode training).
+  * MoE experts: expert dim over "model" (expert parallelism).
+  * activations / token batches: batch over ("pod","data").
+  * KV caches: batch over ("pod","data"), sequence over "model"
+    (flash-decode-style sequence sharding — even for any head count); when
+    the batch is too small (long_500k: B=1) the sequence is sharded over
+    every available axis instead.
+
+Rules are keyed on (trailing parameter name, rank); stacked (scanned) params
+automatically get a leading ``None``.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+
+def _fsdp(axes):
+    return "data" if "data" in axes else None
+
+
+def _dp(axes):
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    return dp if dp else None
+
+
+def _model(axes):
+    return "model" if "model" in axes else None
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _serve_rules(axes):
+    """Inference layouts: weights are consumed read-only every step, so the
+    FSDP dim must NOT require per-step gathers.  Contract-dim sharding over
+    (data x model) turns every projection into local-matmul + tiny
+    activation psum instead of a full weight all-gather per token."""
+    d, m = _fsdp(axes), _model(axes)
+    wide = tuple(a for a in (d, m) if a) or None  # ("data","model")
+    return [
+        ("embed/table", 2, P(m, d)),
+        ("lm_head/table", 2, P(m, d)),
+        ("wq", 2, P(None, wide)),
+        ("wk", 2, P(None, wide)),
+        ("wv", 2, P(None, wide)),
+        ("wo", 2, P(wide, None)),
+        ("wq_a", 2, P(None, wide)),
+        ("wq_b", 2, P(None, wide)),
+        ("wkv_a", 2, P(None, wide)),
+        ("wkv_b", 2, P(None, wide)),
+        ("mlp/wi", 2, P(None, wide)),
+        ("mlp/wg", 2, P(None, wide)),
+        ("mlp/wo", 2, P(wide, None)),
+        ("residual/wi", 2, P(None, wide)),
+        ("residual/wg", 2, P(None, wide)),
+        ("residual/wo", 2, P(wide, None)),
+        ("router", 2, P(None, None)),
+        ("experts/wi", 3, P(m, None, d)),
+        ("experts/wg", 3, P(m, None, d)),
+        ("experts/wo", 3, P(m, d, None)),
+        ("in_proj", 2, P(None, wide)),
+        ("conv_w", 2, P(None, wide)),
+        ("conv_b", 1, P(wide)),
+        ("x_proj", 2, P(wide, None)),
+        ("dt_proj_w", 2, P(None, wide)),
+        ("dt_proj_b", 1, P(wide)),
+        ("A_log", 2, P(wide, None)),
+        ("D", 1, P(wide)),
+        ("out_proj", 2, P(wide, None)),
+        ("patch_proj/w", 2, P(None, wide)),
+    ]
+
+
+# (name predicate, base rank, spec builder) — first match wins.
+def _rules(axes):
+    d, m = _fsdp(axes), _model(axes)
+    return [
+        # embeddings / unembedding: vocab over model, d over fsdp
+        ("embed/table", 2, P(m, d)),
+        ("lm_head/table", 2, P(m, d)),
+        # attention projections
+        ("wq", 2, P(d, m)),
+        ("wk", 2, P(d, m)),
+        ("wv", 2, P(d, m)),
+        ("wo", 2, P(m, d)),
+        # MLA
+        ("wq_a", 2, P(d, m)),
+        ("wq_b", 2, P(d, m)),
+        ("wkv_a", 2, P(d, m)),
+        ("wkv_b", 2, P(d, m)),
+        # dense MLP
+        ("mlp/wi", 2, P(d, m)),
+        ("mlp/wg", 2, P(d, m)),
+        ("mlp/wo", 2, P(m, d)),
+        ("residual/wi", 2, P(d, m)),
+        ("residual/wg", 2, P(d, m)),
+        ("residual/wo", 2, P(m, d)),
+        # MoE: expert-parallel over model; ff over the fsdp axis so the
+        # expert einsums contract an UNsharded d against (E/ep, g/dp, C, d)
+        # activations — no mid-graph expert resharding.
+        ("router", 2, P(d, None)),
+        ("experts/wi", 3, P(m, None, d)),
+        ("experts/wg", 3, P(m, None, d)),
+        ("experts/wo", 3, P(m, d, None)),
+        # mamba
+        ("in_proj", 2, P(d, m)),
+        ("conv_w", 2, P(None, m)),
+        ("conv_b", 1, P(m)),
+        ("x_proj", 2, P(m, None)),
+        ("dt_proj_w", 2, P(None, m)),
+        ("dt_proj_b", 1, P(m)),
+        ("A_log", 2, P(m, None)),
+        ("D", 1, P(m)),
+        ("out_proj", 2, P(m, d)),
+        # vlm stub projection
+        ("patch_proj/w", 2, P(d, m)),
+    ]
+
+
+def param_spec(path: str, leaf, axes, *, mode: str = "train") -> P:
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    last = path.split("/")[-1]
+    rules = _serve_rules(axes) if mode == "serve" else _rules(axes)
+    for name, base_rank, spec in rules:
+        if "/" in name:
+            if not path.endswith(name):
+                continue
+        elif last != name:
+            continue
+        extra = rank - base_rank
+        if extra < 0:
+            return P()
+        return P(*([None] * extra), *spec)
+    # norms, biases, scalars: replicate (with leading stack dims)
+    return P(*([None] * rank))
+
+
+def sanitize_spec(spec: P, shape, axis_sizes: dict | None) -> P:
+    """Drop sharding on any dim the mesh cannot divide evenly (jit input
+    shardings REQUIRE divisibility — odd vocab sizes like 122753, int8
+    scale blocks, and batch=1 long-context cells would fail otherwise)."""
+    if axis_sizes is None:
+        return spec
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        k = 1
+        for a in names:
+            k *= axis_sizes.get(a, 1)
+        out.append(entry if k > 0 and dim % k == 0 else None)
+    return P(*out)
+
+
+def tree_partition_specs(tree, axes, axis_sizes: dict | None = None,
+                         mode: str = "train"):
+    """PartitionSpec pytree matching ``tree`` (params or a shape pytree)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize_spec(
+            param_spec(path_str(path), leaf, axes, mode=mode),
+            getattr(leaf, "shape", ()), axis_sizes),
+        tree)
+
+
+# --------------------------------------------------------------------- #
+# batches and caches
+# --------------------------------------------------------------------- #
+def batch_spec(name: str, leaf, axes) -> P:
+    dp = _dp(axes)
+    rank = getattr(leaf, "ndim", 0)
+    if name == "cache_index" or rank == 0:
+        return P()
+    return P(dp, *([None] * (rank - 1)))
+
+
+def batch_partition_specs(batch, axes, axis_sizes: dict | None = None):
+    return {k: sanitize_spec(batch_spec(k, v, axes),
+                             getattr(v, "shape", ()), axis_sizes)
+            for k, v in batch.items()}
+
+
+def cache_partition_specs(cache_tree, axes, *, global_batch: int,
+                          dp_size: int, axis_sizes: dict | None = None):
+    """Caches carry a leading stack axis: (R, B, S, ...) for kv,
+    (R, B, ...) for mamba states."""
+    dp = _dp(axes)
+    m = _model(axes)
+    shard_batch = global_batch >= dp_size and dp is not None
+
+    def spec(path, leaf):
+        p = path_str(path)
+        rank = leaf.ndim
+        bdim = dp if shard_batch else None
+        if "c_kv" in p or "k_rope" in p:  # (R,B,S,latent)
+            s = P(None, bdim, m, None)
+        elif p.endswith("/k") or p.endswith("/v"):  # (R,B,S,K,hd)
+            if shard_batch:
+                s = P(None, bdim, m, None, None)
+            else:
+                # B too small: spread sequence across everything
+                seq_axes = tuple(a for a in ("pod", "data", "model")
+                                 if a in axes)
+                s = P(None, None, seq_axes, None, None)
+        elif p.endswith("ssm"):  # (R,B,di,n)
+            s = P(None, bdim, m, None)
+        elif p.endswith("conv"):  # (R,B,W-1,di)
+            s = P(None, bdim, None, m)
+        else:
+            s = P(*([None] * rank))
+        return sanitize_spec(s, leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

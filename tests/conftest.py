@@ -1,0 +1,15 @@
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# single-device CPU for smoke tests (the dry-run sets its own XLA_FLAGS in a
+# separate process; tests must see 1 device)
+settings.register_profile(
+    "repro", deadline=None, max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

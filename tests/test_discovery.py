@@ -1,0 +1,49 @@
+"""LookupService: the Jini protocol (register/query/subscribe/unregister)."""
+
+from repro.core import LookupService, Service, ServiceDescriptor
+
+
+def test_register_query_unregister():
+    lk = LookupService()
+    d1 = ServiceDescriptor("s1", None, {"n_devices": 4})
+    d2 = ServiceDescriptor("s2", None, {"n_devices": 8})
+    lk.register(d1)
+    lk.register(d2)
+    assert {d.service_id for d in lk.query()} == {"s1", "s2"}
+    assert [d.service_id for d in lk.query(lambda d: d.n_devices > 4)] == ["s2"]
+    lk.unregister("s1")
+    assert [d.service_id for d in lk.query()] == ["s2"]
+
+
+def test_subscribe_observer_fires_on_new_registration():
+    lk = LookupService()
+    seen = []
+    unsub = lk.subscribe(lambda d: seen.append(d.service_id))
+    lk.register(ServiceDescriptor("a", None))
+    assert seen == ["a"]
+    unsub()
+    lk.register(ServiceDescriptor("b", None))
+    assert seen == ["a"]
+
+
+def test_service_recruit_unregisters_and_release_reregisters():
+    lk = LookupService()
+    svc = Service(lk)
+    svc.start()
+    assert len(lk) == 1
+    assert svc.recruit("client-1") is True
+    assert len(lk) == 0  # paper: a recruited service serves ONE client
+    assert svc.recruit("client-2") is False
+    svc.release()
+    assert len(lk) == 1
+
+
+def test_killed_service_cannot_be_recruited():
+    lk = LookupService()
+    svc = Service(lk)
+    svc.start()
+    svc.kill()
+    assert len(lk) == 0
+    assert svc.recruit("c") is False
+    svc.revive()
+    assert svc.recruit("c") is True

@@ -1,0 +1,66 @@
+"""Integration: the dry-run machinery on a small placeholder fleet
+(subprocess so the 1-device smoke environment is untouched)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)], capture_output=True,
+        text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_lower_compile_analyze_small_mesh():
+    stdout = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax
+        import repro.launch.dryrun as dr
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        lowered, meta = dr.build_lowering(
+            "whisper_tiny", "train_4k", mesh,
+            batch_override=8, train_overrides={"remat": True})
+        rec = dr.analyze(lowered, mesh=mesh)
+        assert rec["memory"]["peak_bytes_per_device"] > 0
+        assert rec["hlo_dot_flops_per_device"] > 0
+        assert rec["collectives"]["total_wire_bytes"] > 0
+        print("TRAIN_OK", json.dumps(rec["collectives"]["count"]))
+
+        lowered, meta = dr.build_lowering("llama3p2_1b", "decode_32k", mesh,
+                                          batch_override=8)
+        rec = dr.analyze(lowered, mesh=mesh)
+        assert rec["memory"]["peak_bytes_per_device"] > 0
+        print("DECODE_OK")
+    """)
+    assert "TRAIN_OK" in stdout and "DECODE_OK" in stdout
+
+
+def test_multi_pod_axis_shards():
+    stdout = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import jax
+        import repro.launch.dryrun as dr
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 2, 4), ("pod", "data", "model"))
+        lowered, meta = dr.build_lowering(
+            "qwen3_1p7b", "train_4k", mesh, batch_override=8,
+            train_overrides={"remat": True})
+        rec = dr.analyze(lowered, mesh=mesh)
+        # the pod axis must appear in the collective schedule (grad sync)
+        assert rec["collectives"]["total_wire_bytes"] > 0
+        print("MULTIPOD_OK")
+    """)
+    assert "MULTIPOD_OK" in stdout

@@ -1,0 +1,36 @@
+"""Elastic re-meshing policy + failure detection."""
+
+import pytest
+
+from repro.runtime.elastic import PodFailureDetector, viable_mesh_shape
+
+
+def test_viable_mesh_shrinks_data_keeps_model():
+    assert viable_mesh_shape(512, model=16, prefer_pods=2) == (2, 16, 16)
+    assert viable_mesh_shape(256, model=16) == (16, 16)
+    # lose a pod's worth of chips: pod fault domains are preserved, data
+    # shrinks instead
+    assert viable_mesh_shape(256, model=16, prefer_pods=2) == (2, 8, 16)
+    # odd survivor counts: data shrinks to the largest power of two
+    assert viable_mesh_shape(384, model=16) == (16, 16)
+    assert viable_mesh_shape(192, model=16) == (8, 16)
+
+
+def test_viable_mesh_raises_when_model_cannot_fit():
+    with pytest.raises(ValueError):
+        viable_mesh_shape(8, model=16)
+
+
+def test_failure_detector():
+    t = [0.0]
+    det = PodFailureDetector(["p0", "p1", "p2"], timeout_s=5.0,
+                             clock=lambda: t[0])
+    assert det.dead_pods() == []
+    t[0] = 4.0
+    det.heartbeat("p0")
+    det.heartbeat("p1")
+    t[0] = 7.0
+    assert det.dead_pods() == ["p2"]
+    assert sorted(det.alive_pods()) == ["p0", "p1"]
+    t[0] = 20.0
+    assert sorted(det.dead_pods()) == ["p0", "p1", "p2"]

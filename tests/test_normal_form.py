@@ -1,0 +1,62 @@
+"""Normal-form rewriting: semantics preservation (property-based)."""
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (Farm, Pipe, Program, Seq, collect_stage_programs,
+                        interpret, normal_form_depth, normalize)
+
+PROGRAMS = [
+    Program(lambda x: x + 1, name="inc"),
+    Program(lambda x: x * 2, name="dbl"),
+    Program(lambda x: x - 3, name="dec"),
+    Program(lambda x: x * x, name="sq"),
+]
+
+
+def skeletons(depth=3):
+    leaf = st.sampled_from(PROGRAMS).map(Seq)
+    return st.recursive(
+        leaf,
+        lambda inner: st.one_of(
+            st.lists(inner, min_size=1, max_size=3).map(lambda s: Pipe(*s)),
+            inner.map(Farm),
+        ),
+        max_leaves=6,
+    )
+
+
+@given(skeletons(), st.lists(st.integers(-50, 50), min_size=1, max_size=8))
+def test_normalize_preserves_semantics(skel, xs):
+    tasks = [jnp.asarray(float(x)) for x in xs]
+    expected = interpret(skel, tasks)
+    nf = normalize(skel)
+    assert isinstance(nf, Farm)
+    assert isinstance(nf.worker, Seq)
+    got = interpret(nf, tasks)
+    assert [float(a) for a in got] == [float(b) for b in expected]
+
+
+@given(skeletons())
+def test_normal_form_is_single_farm_of_seq(skel):
+    nf = normalize(skel)
+    # normal form: farm(seq(fused)) — depth equals the number of collected
+    # sequential stages of the original
+    assert normal_form_depth(nf) == 1 or len(collect_stage_programs(skel)) >= 1
+    assert isinstance(nf, Farm) and isinstance(nf.worker, Seq)
+
+
+def test_pipe_of_farms_fuses():
+    f1, f2, f3 = PROGRAMS[:3]
+    skel = Pipe(Farm(Seq(f1)), Pipe(Seq(f2), Farm(Seq(f3))))
+    assert len(collect_stage_programs(skel)) == 3
+    nf = normalize(skel)
+    out = nf.worker.program(jnp.asarray(5.0))
+    assert float(out) == ((5 + 1) * 2) - 3
+
+
+def test_single_seq_normalizes_to_farm():
+    nf = normalize(Seq(PROGRAMS[0]))
+    assert isinstance(nf, Farm)
+    assert float(nf.worker.program(jnp.asarray(1.0))) == 2.0

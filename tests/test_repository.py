@@ -1,0 +1,104 @@
+"""TaskRepository: leases, rescheduling, speculation, idempotent results."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import TaskRepository
+
+
+def test_pull_order_and_results():
+    repo = TaskRepository(list(range(5)))
+    got = [repo.get_task("s1") for _ in range(5)]
+    assert [g[0] for g in got] == list(range(5))
+    for tid, payload in got:
+        repo.complete(tid, payload * 10, "s1")
+    assert repo.all_done
+    assert repo.results() == [0, 10, 20, 30, 40]
+
+
+def test_complete_is_idempotent_first_wins():
+    repo = TaskRepository(["a"])
+    tid, _ = repo.get_task("s1")
+    assert repo.complete(tid, "r1", "s1") is True
+    assert repo.complete(tid, "r2", "s2") is False
+    assert repo.results() == ["r1"]
+    assert repo.stats()["per_service"] == {"s1": 1}
+
+
+def test_fail_reschedules():
+    repo = TaskRepository(["a", "b"])
+    tid, _ = repo.get_task("s1")
+    repo.fail(tid, "s1")
+    tid2, payload = repo.get_task("s2")
+    # rescheduled task is available again (possibly after task b)
+    seen = {tid2}
+    nxt = repo.get_task("s2")
+    if nxt:
+        seen.add(nxt[0])
+    assert tid in seen
+    assert repo.stats()["reschedules"] == 1
+
+
+def test_lease_expiry_reschedules():
+    repo = TaskRepository(["a"], lease_s=0.05)
+    tid, _ = repo.get_task("s1")
+    time.sleep(0.1)
+    got = repo.get_task("s2", timeout=1.0)
+    assert got is not None and got[0] == tid
+    assert repo.stats()["reschedules"] == 1
+
+
+def test_speculation_issues_duplicate_of_straggler():
+    repo = TaskRepository(list(range(5)), lease_s=60.0, speculation_factor=2.0)
+    # build a completion-time history
+    for _ in range(3):
+        tid, p = repo.get_task("fast")
+        repo.complete(tid, p, "fast")
+    tid, _ = repo.get_task("slow")  # becomes the straggler
+    time.sleep(0.05)
+    # next puller gets the last pending task first, then a speculative copy
+    t5 = repo.get_task("fast")
+    assert t5 is not None
+    repo.complete(t5[0], 0, "fast")
+    spec = repo.get_task("fast", timeout=0.3)
+    assert spec is not None and spec[0] == tid
+    assert repo.stats()["speculative_issues"] == 1
+    # both finish; first result wins
+    repo.complete(tid, "fast-result", "fast")
+    assert not repo.complete(tid, "slow-result", "slow")
+
+
+def test_streaming_repo_waits_for_close():
+    repo = TaskRepository([], streaming=True)
+    assert not repo.all_done
+    tid = repo.add_task("x")
+    got = repo.get_task("s1")
+    assert got == (tid, "x")
+    repo.complete(tid, "y", "s1")
+    assert not repo.all_done  # stream still open
+    repo.close()
+    assert repo.all_done
+
+
+def test_concurrent_pullers_disjoint_tasks():
+    repo = TaskRepository(list(range(50)))
+    seen = []
+    lock = threading.Lock()
+
+    def worker(sid):
+        while True:
+            got = repo.get_task(sid, timeout=0.2, allow_speculation=False)
+            if got is None:
+                return
+            with lock:
+                seen.append(got[0])
+            repo.complete(got[0], None, sid)
+
+    threads = [threading.Thread(target=worker, args=(f"s{i}",)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(seen) == list(range(50))  # every task exactly once
