@@ -7,15 +7,41 @@ from the dry-run artifacts and summarized here if present.
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def compare_batched(args) -> None:
+    """Batched-vs-unbatched dispatch comparison (verified against the
+    sequential ``interpret()`` reference)."""
+    from benchmarks import farm_scalability
+
+    print("name,us_per_call,derived")
+    for name, us, derived in farm_scalability.bench_batched(
+            args.services, max_batch=args.max_batch,
+            max_inflight=args.max_inflight):
+        print(f"{name},{us:.1f},{derived}")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare-batched", action="store_true",
+                    help="only run the batched-vs-per-task dispatch "
+                         "comparison (farm_scalability --batched)")
+    ap.add_argument("--services", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-inflight", type=int, default=2)
+    args = ap.parse_args()
+    if args.compare_batched:
+        compare_batched(args)
+        return
+
     from benchmarks import (elasticity, farm_scalability, fault_tolerance,
                             kernels, load_balance, normal_form)
 

@@ -30,3 +30,19 @@ skel = Pipe(Farm(Seq(Program(lambda x: x + 10, name="shift"))),
 out2: list = []
 BasicClient(skel, None, tasks, out2, lookup=lookup).compute()
 print("pipeline:", [float(v) for v in out2])
+
+# --- the batched async hot path (beyond the paper) -------------------------
+# max_batch    : lease up to N shape-compatible tasks per round-trip and run
+#                them as ONE jax.vmap-compiled call
+# max_inflight : batches kept un-materialized per service, so device compute
+#                overlaps host scheduling
+# adaptive_batching / target_batch_latency_s : per-service controller that
+#                grows/shrinks the lease toward the latency target (slow
+#                services get small leases -> sharp load balancing)
+out3: list = []
+cm3 = BasicClient(program, None, tasks, out3, lookup=lookup,
+                  max_batch=8, max_inflight=2, adaptive_batching=True,
+                  target_batch_latency_s=0.05)
+cm3.compute()
+print("batched :", [float(v) for v in out3])
+print("batching:", cm3.stats()["batching"])

@@ -7,6 +7,8 @@ Two-line API (paper §2)::
     cm.compute()
 """
 
+from .batching import (AdaptiveBatchController, payload_signature,  # noqa: F401
+                       stack_payloads, unstack_results)
 from .client import BasicClient, ControlThread  # noqa: F401
 from .contracts import ApplicationManager, ParDegreeContract  # noqa: F401
 from .discovery import LookupService, ServiceDescriptor, new_service_id  # noqa: F401

@@ -1,0 +1,134 @@
+"""Batched dispatch support: payload signatures, stacking, and the
+adaptive per-service batch-size controller.
+
+JJPF dispatches one task per round-trip per service (paper Algorithms 1-2).
+That is the right granularity for Jini-era workstations, but on a JAX
+runtime the per-dispatch overhead (host scheduling, device handoff,
+result materialization) dwarfs the kernel time of a single task.  The
+batched engine leases *compatible* tasks — same payload shape/dtype tree —
+in groups, stacks them along a new leading axis, and runs ONE
+``jax.jit(jax.vmap(fn))`` call per group.
+
+The controller is deliberately simple: AIMD-style hill climbing toward a
+per-batch latency target.  Slow services (large ``speed_factor``) converge
+to small batches, fast services to large ones, which keeps the pull
+scheduler's load balancing sharp — a slow node never hoards a huge lease.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# payload compatibility
+# --------------------------------------------------------------------- #
+def payload_signature(payload: Any) -> tuple:
+    """Hashable (treedef, leaf shape/dtype) fingerprint of a payload.
+
+    Two payloads with equal signatures can be stacked into one batch and
+    share a compiled executable; this is also the shape component of the
+    service compile-cache key."""
+    leaves, treedef = jax.tree.flatten(payload)
+    leaf_sigs = tuple(
+        (tuple(getattr(leaf, "shape", ())),
+         str(getattr(leaf, "dtype", type(leaf).__name__)))
+        for leaf in leaves)
+    return (treedef, leaf_sigs)
+
+
+def stack_payloads(payloads: Sequence[Any]) -> Any:
+    """Stack same-signature payload pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Round a lease size up to the next power-of-two bucket (capped at
+    ``max_batch``).  Padding tail batches to a bucket bounds the number of
+    distinct batch shapes — and therefore XLA compiles — at
+    ``log2(max_batch) + 2`` instead of one per ragged tail size."""
+    b = 1
+    while b < n:
+        b *= 2
+    return n if b > max_batch else b
+
+
+def pad_stacked(stacked: Any, n: int, m: int) -> Any:
+    """Pad a stacked batch of ``n`` tasks up to ``m`` rows by repeating the
+    last row (pure per-row programs never see their neighbours, so the
+    padding rows are computed and discarded)."""
+    if m <= n:
+        return stacked
+    return jax.tree.map(
+        lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], m - n, axis=0)]),
+        stacked)
+
+
+def unstack_results(result: Any, n: int) -> list:
+    """Split a batched result pytree back into per-task results.
+
+    Slicing is itself an async JAX op, so this does not force the batch to
+    materialize — callers can keep the batch in flight and
+    ``jax.block_until_ready`` later."""
+    return [jax.tree.map(lambda a: a[i], result) for i in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# adaptive batch sizing
+# --------------------------------------------------------------------- #
+class AdaptiveBatchController:
+    """Per-service batch-size hill climber.
+
+    Doubles the batch while a batch completes in under half the latency
+    target, halves it when a batch overruns the target, holds inside the
+    [target/2, target] band.  Because the band spans exactly a factor of
+    two, a monotone latency(batch) curve cannot oscillate: if latency(b)
+    < target/2 then latency(2b) <= 2*latency(b) < target for any
+    sub-linear-overhead service, so growth lands in (or below) the band.
+    """
+
+    def __init__(self, *, min_batch: int = 1, max_batch: int = 64,
+                 initial: int | None = None,
+                 target_latency_s: float = 0.05):
+        if min_batch < 1 or max_batch < min_batch:
+            raise ValueError(f"bad batch bounds [{min_batch}, {max_batch}]")
+        self.min_batch = min_batch
+        self.max_batch = max_batch
+        self.target_latency_s = target_latency_s
+        self.batch = min(max(initial or min_batch, min_batch), max_batch)
+        self.last_latency_s: float | None = None
+        self.throughput_ewma: float | None = None  # tasks / second
+        self.batches_recorded = 0
+
+    def next_batch(self) -> int:
+        return self.batch
+
+    def record(self, n_tasks: int, elapsed_s: float) -> None:
+        """Feed back one completed batch (size actually leased, wall time
+        from dispatch to materialized results)."""
+        if n_tasks <= 0:
+            return
+        self.batches_recorded += 1
+        self.last_latency_s = elapsed_s
+        tput = n_tasks / max(elapsed_s, 1e-9)
+        self.throughput_ewma = (tput if self.throughput_ewma is None
+                                else 0.7 * self.throughput_ewma + 0.3 * tput)
+        # only steer from full-size batches; a tail batch of 2 tasks says
+        # nothing about how a full lease would behave
+        if n_tasks < self.batch:
+            return
+        if elapsed_s < 0.5 * self.target_latency_s:
+            self.batch = min(self.batch * 2, self.max_batch)
+        elif elapsed_s > self.target_latency_s:
+            self.batch = max(self.batch // 2, self.min_batch)
+
+    def stats(self) -> dict:
+        return {
+            "batch": self.batch,
+            "last_latency_s": self.last_latency_s,
+            "throughput_ewma": self.throughput_ewma,
+            "batches_recorded": self.batches_recorded,
+        }

@@ -16,14 +16,30 @@ centralized ``TaskRepository`` (pull scheduling = automatic load balancing),
 pushes them to the service, stores results, and — on a service failure —
 reports the task back for rescheduling and exits.  An asynchronous lookup
 observer recruits services that appear *during* the computation.
+
+Beyond the paper: the batched/asynchronous hot path.  With ``max_batch > 1``
+a control thread leases up to N shape-compatible tasks per round-trip
+(``TaskRepository.get_batch``) and runs them as ONE vmap-compiled call
+(``Service.execute_batch``); with ``max_inflight > 1`` it keeps several
+batches un-materialized on the device, so device compute overlaps host
+scheduling, and only ``block_until_ready``-s the oldest batch when the
+window is full.  An :class:`~repro.core.batching.AdaptiveBatchController`
+per service grows/shrinks the lease size from observed batch latency, which
+keeps slow services (large ``speed_factor``) on small leases — sharp load
+balancing on heterogeneous clusters.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 import uuid
+from collections import deque
 from typing import Any, Callable, Sequence
 
+import jax
+
+from .batching import AdaptiveBatchController, bucket_size, payload_signature
 from .discovery import LookupService, ServiceDescriptor
 from .normal_form import normal_form_depth, normalize
 from .repository import TaskRepository
@@ -39,16 +55,28 @@ class ControlThread(threading.Thread):
         self.client = client
         self.service = service
         self.tasks_done = 0
+        self.batches_dispatched = 0
+        self.controller = AdaptiveBatchController(
+            max_batch=client.max_batch,
+            initial=client.max_batch if not client.adaptive_batching else None,
+            target_latency_s=client.target_batch_latency_s)
 
     def run(self) -> None:
-        repo = self.client.repository
-        program = self.client.program
         try:
-            self.service.prepare(program)
+            self.service.prepare(self.client.program)
         except Exception as e:
             self.client._record_error(e)
             self.client._thread_finished(self, crashed=True)
             return
+        if self.client.max_batch > 1 or self.client.max_inflight > 1:
+            self._run_batched()
+        else:
+            self._run_per_task()
+
+    # ---------------- per-task path (paper Algorithm 1) --------------- #
+    def _run_per_task(self) -> None:
+        repo = self.client.repository
+        program = self.client.program
         while not self.client._stop.is_set():
             got = repo.get_task(self.service.service_id,
                                 allow_speculation=self.client.speculation)
@@ -72,6 +100,94 @@ class ControlThread(threading.Thread):
                 self.tasks_done += 1
         self.client._thread_finished(self, crashed=False)
 
+    # ---------------- batched async path ------------------------------ #
+    def _drain_one(self, inflight: deque) -> bool:
+        """Materialize the oldest in-flight batch and record its results.
+        Returns False if materialization failed (async dispatch defers
+        runtime errors to here); the batch is failed back for re-lease."""
+        task_ids, results, t_dispatch = inflight.popleft()
+        try:
+            results = jax.block_until_ready(results)
+        except Exception as e:
+            for tid in task_ids:
+                self.client.repository.fail(tid, self.service.service_id)
+            if not isinstance(e, ServiceFailure):
+                self.client._record_error(e)
+            return False
+        now = time.monotonic()
+        # service time, not residence time: with max_inflight > 1 a batch
+        # queues behind its predecessors, so time-since-dispatch would be
+        # inflated ~max_inflight-fold and collapse the adaptive batch to 1.
+        # The batch's compute effectively starts at the later of its
+        # dispatch and the previous batch's completion.
+        self.controller.record(len(task_ids),
+                               now - max(t_dispatch, self._last_drain_end))
+        self._last_drain_end = now
+        self.tasks_done += self.client.repository.complete_batch(
+            list(zip(task_ids, results)), self.service.service_id)
+        return True
+
+    def _run_batched(self) -> None:
+        repo = self.client.repository
+        program = self.client.program
+        sid = self.service.service_id
+        adaptive = self.client.adaptive_batching
+        # (task_ids, un-materialized results, dispatch time)
+        inflight: deque = deque()
+        self._last_drain_end = 0.0
+        crashed = False
+        while not self.client._stop.is_set():
+            max_batch = (self.controller.next_batch() if adaptive
+                         else self.client.max_batch)
+            # non-blocking poll while batches are in flight: if nothing is
+            # leasable right now, drain the oldest batch instead of idling
+            batch = repo.get_batch(sid, max_batch,
+                                   timeout=0.0 if inflight else 0.5,
+                                   allow_speculation=self.client.speculation,
+                                   compatible=payload_signature)
+            if batch is None:
+                if inflight:
+                    if not self._drain_one(inflight):
+                        crashed = True
+                        break
+                    continue
+                if repo.all_done:
+                    break
+                continue
+            task_ids = [tid for tid, _ in batch]
+            payloads = [p for _, p in batch]
+            t0 = time.monotonic()
+            try:
+                results = self.service.execute_batch(
+                    program, payloads, block=False,
+                    pad_to=bucket_size(len(payloads), self.client.max_batch))
+            except ServiceFailure:
+                for tid in task_ids:
+                    repo.fail(tid, sid)
+                crashed = True
+                break
+            except Exception as e:  # program bug: surface it, don't hang
+                for tid in task_ids:
+                    repo.fail(tid, sid)
+                self.client._record_error(e)
+                crashed = True
+                break
+            self.batches_dispatched += 1
+            inflight.append((task_ids, results, t0))
+            while len(inflight) >= self.client.max_inflight:
+                if not self._drain_one(inflight):
+                    crashed = True
+                    break
+            if crashed:
+                break
+        # results already dispatched to the device are valid even if the
+        # service has since died — completing them beats re-running them
+        # (failed drains fail their tasks back for re-lease)
+        while inflight:
+            if not self._drain_one(inflight):
+                crashed = True
+        self.client._thread_finished(self, crashed=crashed)
+
 
 class BasicClient:
     """The user-facing farm driver."""
@@ -80,7 +196,25 @@ class BasicClient:
                  contract=None, input_tasks: Sequence[Any] | None = None,
                  output: list | None = None, *, lookup: LookupService | None = None,
                  lease_s: float = 30.0, speculation: bool = True,
-                 elastic: bool = True):
+                 elastic: bool = True, max_batch: int = 1,
+                 max_inflight: int = 1, adaptive_batching: bool = True,
+                 target_batch_latency_s: float = 0.05):
+        """Batching knobs (beyond-paper hot path; defaults reproduce the
+        paper's one-task-per-round-trip dispatch exactly):
+
+        max_batch
+            Upper bound on tasks leased per service round-trip; ``> 1``
+            switches the control threads to the vmap-batched path.
+        max_inflight
+            Batches kept un-materialized per service so device compute
+            overlaps host scheduling (``1`` = fully synchronous).
+        adaptive_batching
+            Let the per-service controller grow/shrink the lease size
+            toward ``target_batch_latency_s`` (slow services get smaller
+            leases); ``False`` always leases ``max_batch``.
+        target_batch_latency_s
+            Latency target per batch for the adaptive controller.
+        """
         # --- normal-form pre-processing (paper §2) -------------------- #
         if isinstance(program, Skeleton):
             nf = normalize(program)
@@ -99,6 +233,12 @@ class BasicClient:
         self.output = output if output is not None else []
         self.speculation = speculation
         self.elastic = elastic
+        if max_batch < 1 or max_inflight < 1:
+            raise ValueError("max_batch and max_inflight must be >= 1")
+        self.max_batch = max_batch
+        self.max_inflight = max_inflight
+        self.adaptive_batching = adaptive_batching
+        self.target_batch_latency_s = target_batch_latency_s
 
         self._stop = threading.Event()
         self._threads_lock = threading.Lock()
@@ -190,6 +330,16 @@ class BasicClient:
     def stats(self) -> dict:
         s = self.repository.stats()
         s["fused_stages"] = self.fused_stages
+        if self.max_batch > 1 or self.max_inflight > 1:
+            with self._threads_lock:
+                threads = list(self._threads)
+            s["batching"] = {
+                t.service.service_id: {
+                    **t.controller.stats(),
+                    "batches_dispatched": t.batches_dispatched,
+                    "cache_hits": t.service.cache_hits,
+                    "cache_misses": t.service.cache_misses,
+                } for t in threads}
         return s
 
 

@@ -24,12 +24,16 @@ from .skeletons import Program, Skeleton
 class FarmExecutor:
     def __init__(self, program: Program | Skeleton | Callable, *,
                  lookup: LookupService | None = None, lease_s: float = 30.0,
-                 speculation: bool = True):
+                 speculation: bool = True, max_batch: int = 1,
+                 max_inflight: int = 1, adaptive_batching: bool = True,
+                 target_batch_latency_s: float = 0.05):
         self._futures: dict[int, Future] = {}
         self._flock = threading.Lock()
         self._client = BasicClient(
             program, None, [], lookup=lookup, lease_s=lease_s,
-            speculation=speculation)
+            speculation=speculation, max_batch=max_batch,
+            max_inflight=max_inflight, adaptive_batching=adaptive_batching,
+            target_batch_latency_s=target_batch_latency_s)
         # swap in a streaming completion-callback repository
         self._client.repository = TaskRepository(
             [], lease_s=lease_s, on_complete=self._resolve, streaming=True)

@@ -11,7 +11,10 @@ Extensions beyond the paper (documented in DESIGN.md):
   * lease timeouts — a recruited service that stops heartbeating loses its
     lease and the task is re-enqueued;
   * speculative re-execution of stragglers (MapReduce-style backup tasks):
-    ``complete`` is idempotent, first result wins.
+    ``complete`` is idempotent, first result wins;
+  * batched leasing — ``get_batch`` hands a service up to N shape-compatible
+    tasks in one round-trip so the client can run them as a single
+    vmap-compiled call (see ``repro.core.batching``).
 """
 
 from __future__ import annotations
@@ -21,6 +24,9 @@ import time
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any
+
+
+_UNSET = object()
 
 
 class TaskState(Enum):
@@ -40,6 +46,8 @@ class TaskRecord:
     result: Any = None
     attempts: int = 0
     completed_by: str | None = None
+    group_key: Any = None  # memoized compatibility key (see get_batch)
+    group_key_set: bool = False
 
 
 class TaskRepository:
@@ -125,6 +133,74 @@ class TaskRepository:
                     return None
                 self._lock.wait(remaining)
 
+    def get_batch(self, service_id: str, max_batch: int, *,
+                  timeout: float = 0.5, allow_speculation: bool = True,
+                  compatible=None):
+        """Lease up to ``max_batch`` *compatible* pending tasks at once.
+
+        ``compatible`` maps a payload to a hashable group key (e.g.
+        :func:`repro.core.batching.payload_signature`); only tasks sharing
+        the key of the first pending task are leased together, the rest
+        stay pending in their original order.  ``None`` treats every task
+        as compatible.
+
+        Returns a non-empty list of ``(task_id, payload)`` pairs, or
+        ``None`` with the same contract as :meth:`get_task` (exhausted, or
+        nothing leasable before the timeout).  When nothing is pending but
+        a straggler qualifies, returns a singleton speculative batch."""
+        if max_batch <= 1:
+            got = self.get_task(service_id, timeout=timeout,
+                                allow_speculation=allow_speculation)
+            return None if got is None else [got]
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                self._expire_leases_locked()
+                if (self._done_count == len(self.records)
+                        and not (self.streaming and not self._closed)):
+                    return None
+                if self._pending:
+                    batch: list = []
+                    skipped: list[int] = []
+                    group_key: Any = _UNSET  # `compatible` may return None
+                    now = time.monotonic()
+                    while self._pending and len(batch) < max_batch:
+                        tid = self._pending.pop(0)
+                        rec = self.records[tid]
+                        if compatible is None:
+                            key = None
+                        elif rec.group_key_set:
+                            key = rec.group_key
+                        else:  # computed once per task, under the lock
+                            key = rec.group_key = compatible(rec.payload)
+                            rec.group_key_set = True
+                        if group_key is _UNSET:
+                            group_key = key
+                        elif key != group_key:
+                            skipped.append(tid)
+                            continue
+                        rec.state = TaskState.LEASED
+                        rec.owners.add(service_id)
+                        rec.lease_start = now
+                        rec.lease_deadline = now + self.lease_s
+                        rec.attempts += 1
+                        batch.append((tid, rec.payload))
+                    self._pending[:0] = skipped
+                    if batch:
+                        return batch
+                if allow_speculation:
+                    tid = self._speculation_candidate_locked(service_id)
+                    if tid is not None:
+                        rec = self.records[tid]
+                        rec.owners.add(service_id)
+                        rec.attempts += 1
+                        self.speculative_issues += 1
+                        return [(tid, rec.payload)]
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._lock.wait(remaining)
+
     def _speculation_candidate_locked(self, service_id: str):
         """A task leased for >= speculation_factor × median completion time,
         not already being computed by this service."""
@@ -159,6 +235,34 @@ class TaskRepository:
         if self.on_complete is not None:
             self.on_complete(task_id, result)
         return True
+
+    def complete_batch(self, results: list, service_id: str) -> int:
+        """Record a batch of ``(task_id, result)`` pairs under ONE lock
+        acquisition and ONE notify — with batched dispatch, per-task
+        ``complete`` calls made the repository lock the next bottleneck.
+        Returns how many results were recorded (idempotent like
+        ``complete``)."""
+        recorded: list[tuple[int, Any]] = []
+        with self._lock:
+            now = time.monotonic()
+            for task_id, result in results:
+                rec = self.records[task_id]
+                if rec.state == TaskState.DONE:
+                    continue
+                rec.state = TaskState.DONE
+                rec.result = result
+                rec.completed_by = service_id
+                self._done_count += 1
+                self._durations.append(now - rec.lease_start)
+                self.completions_per_service[service_id] = (
+                    self.completions_per_service.get(service_id, 0) + 1)
+                recorded.append((task_id, result))
+            if recorded:
+                self._lock.notify_all()
+        if self.on_complete is not None:
+            for task_id, result in recorded:
+                self.on_complete(task_id, result)
+        return len(recorded)
 
     def fail(self, task_id: int, service_id: str) -> None:
         """A service died / errored mid-task: reschedule (the paper's natural

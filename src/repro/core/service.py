@@ -23,6 +23,8 @@ from typing import Any, Callable
 
 import jax
 
+from .batching import (pad_stacked, payload_signature, stack_payloads,
+                       unstack_results)
 from .discovery import LookupService, ServiceDescriptor, new_service_id
 from .skeletons import Program
 
@@ -51,7 +53,15 @@ class Service:
         self._recruited_by: str | None = None
         self._fail_after: int | None = None
         self._tasks_executed = 0
-        self._compiled: dict[int, Callable] = {}
+        # Compile cache keyed by (program uid+name, payload signature,
+        # batch size).  NOT by id(program): CPython reuses addresses after
+        # GC, which can silently serve a dead program's executable; and an
+        # id key cannot distinguish payload shapes, so cache stats were
+        # meaningless.  batch_size is None for the per-task path.
+        self._compiled: dict[tuple, Callable] = {}
+        self._prepared: dict[int, Callable] = {}  # warm per-program wrappers
+        self.cache_hits = 0
+        self.cache_misses = 0
         self.last_heartbeat = time.monotonic()
 
     # ---------------- lifecycle (Algorithm 2) ------------------------ #
@@ -81,23 +91,65 @@ class Service:
 
     # ---------------- execution -------------------------------------- #
     def prepare(self, program: Program) -> None:
+        """Warm the per-program jit wrapper (shape-agnostic; the shape-keyed
+        cache entries are created lazily at first execution)."""
         with self._lock:
-            if id(program) not in self._compiled:
-                self._compiled[id(program)] = program.prepare(self.devices)
+            if program.uid not in self._prepared:
+                self._prepared[program.uid] = program.prepare(self.devices)
+
+    def _get_compiled(self, program: Program, payload,
+                      batch_size: int | None) -> Callable:
+        """Shape-keyed compile-cache lookup.
+
+        ``batch_size=None`` is the per-task path; an integer selects the
+        vmap wrapper specialized to that batch size (different batch sizes
+        are different XLA shapes, so each is its own executable).  Non-jit
+        programs are shape-agnostic host callables — one cache entry per
+        path, not one per (signature, size)."""
+        if not program._jit:
+            key = (program.uid, program.name, None,
+                   None if batch_size is None else "host_loop")
+        else:
+            key = (program.uid, program.name, payload_signature(payload),
+                   batch_size)
+        with self._lock:
+            fn = self._compiled.get(key)
+            if fn is not None:
+                self.cache_hits += 1
+                return fn
+            self.cache_misses += 1
+        if batch_size is None:
+            fn = self._prepared.get(program.uid) or program.prepare(self.devices)
+        else:
+            fn = program.prepare_batched(self.devices)
+        with self._lock:
+            if batch_size is None:
+                self._prepared.setdefault(program.uid, fn)
+            return self._compiled.setdefault(key, fn)
+
+    def _check_dispatchable(self) -> None:
+        """Locked check of liveness + fault injection at batch start (the
+        paper's natural descheduling point is the task start)."""
+        if not self._alive:
+            raise ServiceFailure(f"{self.service_id} is dead")
+        if (self._fail_after is not None
+                and self._tasks_executed >= self._fail_after):
+            self._alive = False
+            raise ServiceFailure(f"{self.service_id} failed (injected)")
+
+    def _finish_tasks(self, n: int) -> None:
+        with self._lock:
+            if not self._alive:  # killed mid-task
+                raise ServiceFailure(f"{self.service_id} died mid-task")
+            self._tasks_executed += n
+            self.last_heartbeat = time.monotonic()
 
     def execute(self, program: Program, payload) -> Any:
         """Run one task.  Raises ServiceFailure if the node is dead or its
         fault-injection counter fires."""
         with self._lock:
-            if not self._alive:
-                raise ServiceFailure(f"{self.service_id} is dead")
-            if self._fail_after is not None and self._tasks_executed >= self._fail_after:
-                self._alive = False
-                raise ServiceFailure(f"{self.service_id} failed (injected)")
-            fn = self._compiled.get(id(program))
-        if fn is None:
-            self.prepare(program)
-            fn = self._compiled[id(program)]
+            self._check_dispatchable()
+        fn = self._get_compiled(program, payload, None)
         if self.task_delay_s:
             time.sleep(self.task_delay_s)  # network/serialization stand-in
         result = fn(payload)
@@ -105,12 +157,46 @@ class Service:
         if self.speed_factor != 1.0:
             # heterogeneity simulation: slower nodes take proportionally longer
             time.sleep(max(0.0, (self.speed_factor - 1.0)) * 0.002)
-        with self._lock:
-            if not self._alive:  # killed mid-task
-                raise ServiceFailure(f"{self.service_id} died mid-task")
-            self._tasks_executed += 1
-            self.last_heartbeat = time.monotonic()
+        self._finish_tasks(1)
         return result
+
+    def execute_batch(self, program: Program, payloads: list, *,
+                      block: bool = True, pad_to: int | None = None) -> list:
+        """Run a batch of shape-compatible tasks as ONE compiled call.
+
+        Payloads are stacked along a new leading axis and computed by the
+        ``jax.jit(jax.vmap(fn))`` executable for this (signature, batch
+        size).  With ``block=False`` the returned per-task results are
+        un-materialized device values — the caller can keep the batch in
+        flight (device compute overlapping host scheduling) and
+        ``jax.block_until_ready`` them later.
+
+        The dispatch round-trip stand-in (``task_delay_s``) is paid once
+        per batch — that is the point of batching — while the
+        heterogeneity stand-in (``speed_factor``) scales with the number
+        of tasks, like real compute would."""
+        n = len(payloads)
+        if n == 0:
+            return []
+        with self._lock:
+            self._check_dispatchable()
+        if self.task_delay_s:
+            time.sleep(self.task_delay_s)  # one round-trip per *batch*
+        if not program._jit:
+            host_loop = self._get_compiled(program, payloads[0], n)
+            results = host_loop(payloads)
+        else:
+            m = pad_to if pad_to is not None and pad_to > n else n
+            fn = self._get_compiled(program, payloads[0], m)
+            stacked = pad_stacked(stack_payloads(payloads), n, m)
+            out = fn(stacked)
+            if block:
+                out = jax.block_until_ready(out)
+            results = unstack_results(out, n)  # padding rows dropped
+        if self.speed_factor != 1.0:
+            time.sleep(max(0.0, (self.speed_factor - 1.0)) * 0.002 * n)
+        self._finish_tasks(n)
+        return results
 
     # ---------------- fault injection -------------------------------- #
     def kill(self) -> None:

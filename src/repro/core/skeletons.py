@@ -9,6 +9,7 @@ step that specializes (jit-compiles) it for a service's devices.
 
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -23,20 +24,56 @@ class Program:
     ``jit=False`` for host-side tasks (e.g. I/O simulation in tests).
     """
 
+    _uid_counter = itertools.count()
+
     def __init__(self, fn: Callable, *, name: str | None = None, jit: bool = True,
                  static_argnames: Sequence[str] = ()):
         self.fn = fn
         self.name = name or getattr(fn, "__name__", "program")
+        # Stable identity for compile caches.  ``id(program)`` is unsafe as a
+        # cache key: CPython reuses addresses after GC, so a dead program's
+        # compiled artifact could be served for a new one.
+        self.uid = next(Program._uid_counter)
         self._jit = jit
         self._static = tuple(static_argnames)
+        # jit wrappers memoized per device set: services on the same devices
+        # share ONE wrapper (and therefore XLA's tracing/compile cache)
+        # instead of recompiling identical executables per service.
+        self._wrappers: dict[tuple, Callable] = {}
+
+    def _device_key(self, devices) -> tuple:
+        return tuple(id(d) for d in devices) if devices else ()
 
     def prepare(self, devices=None) -> Callable:
         if not self._jit:
             return self.fn
-        if devices:
-            return jax.jit(self.fn, static_argnames=self._static,
-                           device=devices[0])
-        return jax.jit(self.fn, static_argnames=self._static)
+        key = ("task", self._device_key(devices))
+        fn = self._wrappers.get(key)
+        if fn is None:
+            if devices:
+                fn = jax.jit(self.fn, static_argnames=self._static,
+                             device=devices[0])
+            else:
+                fn = jax.jit(self.fn, static_argnames=self._static)
+            fn = self._wrappers.setdefault(key, fn)
+        return fn
+
+    def prepare_batched(self, devices=None) -> Callable:
+        """Compiled callable over a stacked batch: one XLA program computes
+        N tasks (payloads stacked along a new leading axis).  Non-jit
+        programs fall back to a host-side loop over the batch."""
+        if not self._jit:
+            def host_loop(payloads):
+                return [self.fn(p) for p in payloads]
+            return host_loop
+        key = ("batch", self._device_key(devices))
+        fn = self._wrappers.get(key)
+        if fn is None:
+            batched = jax.vmap(self.fn)
+            fn = (jax.jit(batched, device=devices[0]) if devices
+                  else jax.jit(batched))
+            fn = self._wrappers.setdefault(key, fn)
+        return fn
 
     def __call__(self, task):
         return self.fn(task)

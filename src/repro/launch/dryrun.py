@@ -136,6 +136,8 @@ def analyze(lowered, *, mesh, want_hlo: bool = False) -> dict:
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     ana = analyze_hlo(hlo)  # trip-count-weighted (cost_analysis counts
     coll = ana.collectives  # while bodies once)

@@ -1,13 +1,20 @@
+import importlib.util
+
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# single-device CPU for smoke tests (the dry-run sets its own XLA_FLAGS in a
-# separate process; tests must see 1 device)
-settings.register_profile(
-    "repro", deadline=None, max_examples=20,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+# hypothesis is an optional test dependency (the `test` extra in
+# pyproject.toml); property-based tests skip themselves when it is absent,
+# and the profile setup below must not kill collection of the whole suite.
+if importlib.util.find_spec("hypothesis") is not None:
+    from hypothesis import HealthCheck, settings
+
+    # single-device CPU for smoke tests (the dry-run sets its own XLA_FLAGS
+    # in a separate process; tests must see 1 device)
+    settings.register_profile(
+        "repro", deadline=None, max_examples=20,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+    settings.load_profile("repro")
 
 
 @pytest.fixture

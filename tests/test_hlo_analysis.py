@@ -49,8 +49,8 @@ def test_collectives_counted_with_groups():
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P, NamedSharding
             from repro.utils.hlo import analyze_hlo
-            mesh = jax.make_mesh((4,), ("d",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((4,), ("d",))
             def f(x): return x.sum()
             xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
             with mesh:

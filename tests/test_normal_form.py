@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core import (Farm, Pipe, Program, Seq, collect_stage_programs,
