@@ -7,6 +7,12 @@ workload on the per-task path (one 10 ms round-trip per task, paper
 Algorithms 1-2) and on the batched async path (one round-trip per *batch*
 of vmap-stacked tasks, ``max_batch``/``max_inflight`` knobs).  Both outputs
 are checked against the sequential ``interpret()`` reference.
+
+``--transport={inproc,proc}`` picks the farm backend for that comparison:
+``inproc`` is the zero-copy in-process default, ``proc`` spawns one OS
+worker process per service (``repro.launch.now.NowPool``) and pays real
+serialization + socket round-trips.  Either way both dispatch paths are
+verified bit-identical to ``interpret()``.
 """
 
 from __future__ import annotations
@@ -40,19 +46,31 @@ def _tasks(n: int = N_TASKS) -> list:
 
 
 def run(n_services: int, *, max_batch: int = 1, max_inflight: int = 1,
-        adaptive: bool = True, n_tasks: int = N_TASKS) -> tuple[float, list]:
+        adaptive: bool = True, n_tasks: int = N_TASKS,
+        transport: str = "inproc") -> tuple[float, list]:
     lookup = LookupService()
-    for i in range(n_services):
-        Service(lookup, task_delay_s=TASK_MS / 1e3,
-                service_id=f"s{i}").start()
+    pool = None
+    if transport == "proc":
+        from repro.launch.now import NowPool
+
+        pool = NowPool(n_services, lookup, task_delay_s=TASK_MS / 1e3,
+                       service_prefix="s")
+    else:
+        for i in range(n_services):
+            Service(lookup, task_delay_s=TASK_MS / 1e3,
+                    service_id=f"s{i}").start()
     out: list = []
     tasks = _tasks(n_tasks)
-    t0 = time.perf_counter()
-    cm = BasicClient(_program(), None, tasks, out,
-                     lookup=lookup, speculation=False, max_batch=max_batch,
-                     max_inflight=max_inflight, adaptive_batching=adaptive)
-    cm.compute(timeout=600)
-    return time.perf_counter() - t0, out
+    try:
+        t0 = time.perf_counter()
+        cm = BasicClient(_program(), None, tasks, out,
+                         lookup=lookup, speculation=False, max_batch=max_batch,
+                         max_inflight=max_inflight, adaptive_batching=adaptive)
+        cm.compute(timeout=600)
+        return time.perf_counter() - t0, out
+    finally:
+        if pool is not None:
+            pool.shutdown()
 
 
 def bench() -> list[tuple[str, float, str]]:
@@ -72,32 +90,39 @@ def bench() -> list[tuple[str, float, str]]:
 
 
 def bench_batched(n_services: int = 4, *, max_batch: int = 16,
-                  max_inflight: int = 2) -> list[tuple[str, float, str]]:
-    """Batched vs per-task throughput on the same simulated cluster, both
+                  max_inflight: int = 2, transport: str = "inproc"
+                  ) -> list[tuple[str, float, str]]:
+    """Batched vs per-task throughput on the same cluster (simulated
+    services in-process, or real worker processes with ``proc``), both
     verified against the sequential reference semantics."""
     n_tasks = 6 * n_services * max_batch  # amortize, keep runtime bounded
     reference = [float(v) for v in
                  interpret(Farm(Seq(_program())), _tasks(n_tasks))]
 
-    # warm up the jit caches once so neither mode pays first-compile
-    # (the batched warm-up walks the controller's 1->2->...->max_batch
-    # slow start, compiling every power-of-two bucket the measured run's
-    # padded leases can hit)
-    run(1, n_tasks=4)
-    run(1, n_tasks=4 * max_batch, max_batch=max_batch,
-        max_inflight=max_inflight)
+    if transport == "inproc":
+        # warm up the jit caches once so neither mode pays first-compile
+        # (the batched warm-up walks the controller's 1->2->...->max_batch
+        # slow start, compiling every power-of-two bucket the measured
+        # run's padded leases can hit).  proc workers are fresh processes
+        # per run — both modes pay their own compiles, which is the honest
+        # comparison for that backend.
+        run(1, n_tasks=4)
+        run(1, n_tasks=4 * max_batch, max_batch=max_batch,
+            max_inflight=max_inflight)
 
-    dt_seq, out_seq = run(n_services, n_tasks=n_tasks)
+    dt_seq, out_seq = run(n_services, n_tasks=n_tasks, transport=transport)
     dt_bat, out_bat = run(n_services, n_tasks=n_tasks, max_batch=max_batch,
-                          max_inflight=max_inflight, adaptive=False)
+                          max_inflight=max_inflight, adaptive=False,
+                          transport=transport)
     for label, out in (("per-task", out_seq), ("batched", out_bat)):
         got = [float(v) for v in out]
         assert got == reference, f"{label} output diverges from interpret()"
     speedup = dt_seq / dt_bat
     return [
-        (f"farm_batched/services={n_services}/per_task",
+        (f"farm_batched/{transport}/services={n_services}/per_task",
          dt_seq * 1e6 / n_tasks, f"tput={n_tasks/dt_seq:.0f}/s"),
-        (f"farm_batched/services={n_services}/batch={max_batch}x{max_inflight}",
+        (f"farm_batched/{transport}/services={n_services}"
+         f"/batch={max_batch}x{max_inflight}",
          dt_bat * 1e6 / n_tasks,
          f"tput={n_tasks/dt_bat:.0f}/s speedup={speedup:.2f}x "
          f"outputs=identical"),
@@ -109,12 +134,17 @@ if __name__ == "__main__":
     ap.add_argument("--batched", action="store_true",
                     help="batched-vs-per-task comparison (verified vs "
                          "the sequential interpret() reference)")
+    ap.add_argument("--transport", choices=("inproc", "proc"), default=None,
+                    help="farm backend; selecting one runs the batched-vs-"
+                         "per-task comparison over it (proc = one OS "
+                         "process per service)")
     ap.add_argument("--services", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=2)
     args = ap.parse_args()
     rows = (bench_batched(args.services, max_batch=args.max_batch,
-                          max_inflight=args.max_inflight)
-            if args.batched else bench())
+                          max_inflight=args.max_inflight,
+                          transport=args.transport or "inproc")
+            if (args.batched or args.transport) else bench())
     for r in rows:
         print(",".join(str(x) for x in r))

@@ -25,7 +25,7 @@ def compare_batched(args) -> None:
     print("name,us_per_call,derived")
     for name, us, derived in farm_scalability.bench_batched(
             args.services, max_batch=args.max_batch,
-            max_inflight=args.max_inflight):
+            max_inflight=args.max_inflight, transport=args.transport):
         print(f"{name},{us:.1f},{derived}")
 
 
@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--services", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=2)
+    ap.add_argument("--transport", choices=("inproc", "proc"),
+                    default="inproc",
+                    help="farm backend for --compare-batched (proc = one "
+                         "OS process per service)")
     args = ap.parse_args()
     if args.compare_batched:
         compare_batched(args)

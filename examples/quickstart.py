@@ -1,17 +1,35 @@
 """Quickstart: the paper's two-line API on a local 'cluster'.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --transport=proc
+
+``--transport=inproc`` (default) stands the cluster up as objects in this
+process; ``--transport=proc`` spawns one OS worker process per service
+(the NoW deployment) — same client code, same two lines, the endpoint
+addresses in the lookup are just ``proc://`` instead of ``inproc://``.
 """
+
+import argparse
 
 import jax.numpy as jnp
 
 from repro.core import (BasicClient, Farm, LookupService, Pipe, Program, Seq,
                         Service)
 
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--transport", choices=("inproc", "proc"), default="inproc")
+args = ap.parse_args()
+
 # --- stand up a tiny cluster (normally: one Service per pod/workstation) --
 lookup = LookupService()
-for _ in range(3):
-    Service(lookup).start()
+pool = None
+if args.transport == "proc":
+    from repro.launch.now import NowPool
+
+    pool = NowPool(3, lookup, service_prefix="qs")
+else:
+    for _ in range(3):
+        Service(lookup).start()
 
 # --- the paper's two lines ------------------------------------------------
 program = Program(lambda x: x * x + 1, name="poly")
@@ -46,3 +64,6 @@ cm3 = BasicClient(program, None, tasks, out3, lookup=lookup,
 cm3.compute()
 print("batched :", [float(v) for v in out3])
 print("batching:", cm3.stats()["batching"])
+
+if pool is not None:
+    pool.shutdown()

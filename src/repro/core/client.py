@@ -20,13 +20,22 @@ observer recruits services that appear *during* the computation.
 Beyond the paper: the batched/asynchronous hot path.  With ``max_batch > 1``
 a control thread leases up to N shape-compatible tasks per round-trip
 (``TaskRepository.get_batch``) and runs them as ONE vmap-compiled call
-(``Service.execute_batch``); with ``max_inflight > 1`` it keeps several
-batches un-materialized on the device, so device compute overlaps host
-scheduling, and only ``block_until_ready``-s the oldest batch when the
+(``ServiceHandle.execute_batch``); with ``max_inflight > 1`` it keeps
+several batches un-materialized on the device, so device compute overlaps
+host scheduling, and only ``block_until_ready``-s the oldest batch when the
 window is full.  An :class:`~repro.core.batching.AdaptiveBatchController`
 per service grows/shrinks the lease size from observed batch latency, which
 keeps slow services (large ``speed_factor``) on small leases — sharp load
 balancing on heterogeneous clusters.
+
+Control threads are transport-agnostic: they talk to a
+:class:`~repro.core.transport.base.ServiceHandle` resolved from the
+registered endpoint address, so the per-task and batched/AIMD paths run
+unmodified whether the service is an object in this process
+(``inproc://``) or a worker process on the other end of a socket
+(``proc://``).  Handles whose backend can die silently are heartbeated by
+a :class:`~repro.core.transport.base.LivenessMonitor` that expires the
+dead service's repository leases immediately.
 """
 
 from __future__ import annotations
@@ -41,19 +50,20 @@ import jax
 
 from .batching import AdaptiveBatchController, bucket_size, payload_signature
 from .discovery import LookupService, ServiceDescriptor
+from .errors import ServiceFailure
 from .normal_form import normal_form_depth, normalize
 from .repository import TaskRepository
-from .service import Service, ServiceFailure
 from .skeletons import Farm, Program, Seq, Skeleton
+from .transport import LivenessMonitor, ServiceHandle, resolve_handle
 
 
 class ControlThread(threading.Thread):
     """One per recruited service (paper §2)."""
 
-    def __init__(self, client: "BasicClient", service: Service):
-        super().__init__(daemon=True, name=f"ctl-{service.service_id}")
+    def __init__(self, client: "BasicClient", handle: ServiceHandle):
+        super().__init__(daemon=True, name=f"ctl-{handle.service_id}")
         self.client = client
-        self.service = service
+        self.handle = handle
         self.tasks_done = 0
         self.batches_dispatched = 0
         self.controller = AdaptiveBatchController(
@@ -63,7 +73,10 @@ class ControlThread(threading.Thread):
 
     def run(self) -> None:
         try:
-            self.service.prepare(self.client.program)
+            self.handle.prepare(self.client.program)
+        except ServiceFailure:
+            self.client._thread_finished(self, crashed=True)
+            return
         except Exception as e:
             self.client._record_error(e)
             self.client._thread_finished(self, crashed=True)
@@ -77,8 +90,9 @@ class ControlThread(threading.Thread):
     def _run_per_task(self) -> None:
         repo = self.client.repository
         program = self.client.program
+        sid = self.handle.service_id
         while not self.client._stop.is_set():
-            got = repo.get_task(self.service.service_id,
+            got = repo.get_task(sid,
                                 allow_speculation=self.client.speculation)
             if got is None:
                 if repo.all_done:
@@ -86,17 +100,17 @@ class ControlThread(threading.Thread):
                 continue
             task_id, payload = got
             try:
-                result = self.service.execute(program, payload)
+                result = self.handle.execute(program, payload)
             except ServiceFailure:
-                repo.fail(task_id, self.service.service_id)
+                repo.fail(task_id, sid)
                 self.client._thread_finished(self, crashed=True)
                 return
             except Exception as e:  # program bug: surface it, don't hang
-                repo.fail(task_id, self.service.service_id)
+                repo.fail(task_id, sid)
                 self.client._record_error(e)
                 self.client._thread_finished(self, crashed=True)
                 return
-            if repo.complete(task_id, result, self.service.service_id):
+            if repo.complete(task_id, result, sid):
                 self.tasks_done += 1
         self.client._thread_finished(self, crashed=False)
 
@@ -110,7 +124,7 @@ class ControlThread(threading.Thread):
             results = jax.block_until_ready(results)
         except Exception as e:
             for tid in task_ids:
-                self.client.repository.fail(tid, self.service.service_id)
+                self.client.repository.fail(tid, self.handle.service_id)
             if not isinstance(e, ServiceFailure):
                 self.client._record_error(e)
             return False
@@ -124,13 +138,13 @@ class ControlThread(threading.Thread):
                                now - max(t_dispatch, self._last_drain_end))
         self._last_drain_end = now
         self.tasks_done += self.client.repository.complete_batch(
-            list(zip(task_ids, results)), self.service.service_id)
+            list(zip(task_ids, results)), self.handle.service_id)
         return True
 
     def _run_batched(self) -> None:
         repo = self.client.repository
         program = self.client.program
-        sid = self.service.service_id
+        sid = self.handle.service_id
         adaptive = self.client.adaptive_batching
         # (task_ids, un-materialized results, dispatch time)
         inflight: deque = deque()
@@ -158,7 +172,7 @@ class ControlThread(threading.Thread):
             payloads = [p for _, p in batch]
             t0 = time.monotonic()
             try:
-                results = self.service.execute_batch(
+                results = self.handle.execute_batch(
                     program, payloads, block=False,
                     pad_to=bucket_size(len(payloads), self.client.max_batch))
             except ServiceFailure:
@@ -243,21 +257,43 @@ class BasicClient:
         self._stop = threading.Event()
         self._threads_lock = threading.Lock()
         self._threads: list[ControlThread] = []
-        self._recruited: dict[str, Service] = {}
+        self._recruited: dict[str, ServiceHandle] = {}
         self._errors: list[Exception] = []
         self._unsubscribe = None
+        self._monitor: LivenessMonitor | None = None
 
     # ------------------------------------------------------------- #
     def _recruit(self, desc: ServiceDescriptor) -> bool:
-        service: Service = desc.endpoint
-        if not service.recruit(self.client_id):
+        handle = resolve_handle(desc, lookup=self.lookup)
+        if handle is None:  # stale registration (endpoint already gone)
             return False
-        thread = ControlThread(self, service)
+        if not handle.recruit(self.client_id):
+            handle.close()
+            return False
+        thread = ControlThread(self, handle)
         with self._threads_lock:
-            self._recruited[service.service_id] = service
+            self._recruited[handle.service_id] = handle
             self._threads.append(thread)
+        if handle.needs_heartbeat:
+            self._watch(handle)
         thread.start()
         return True
+
+    def _watch(self, handle: ServiceHandle) -> None:
+        """Heartbeat a handle whose backend can die without a goodbye; on
+        declared death, expire its leases immediately so waiting control
+        threads re-lease the tasks without sitting out ``lease_s``."""
+        with self._threads_lock:
+            if self._monitor is None:
+                self._monitor = LivenessMonitor()
+            monitor = self._monitor
+        monitor.watch(handle, self.repository.expire_service)
+
+    def _stop_monitor(self) -> None:
+        with self._threads_lock:
+            monitor, self._monitor = self._monitor, None
+        if monitor is not None:
+            monitor.stop()
 
     def _on_new_service(self, desc: ServiceDescriptor) -> None:
         """Asynchronous recruitment (publish/subscribe path)."""
@@ -268,12 +304,18 @@ class BasicClient:
         self._recruit(desc)
 
     def _thread_finished(self, thread: ControlThread, *, crashed: bool) -> None:
+        sid = thread.handle.service_id
         with self._threads_lock:
-            svc = self._recruited.pop(thread.service.service_id, None)
-        if svc is not None and not crashed:
+            handle = self._recruited.pop(sid, None)
+            monitor = self._monitor
+        if monitor is not None and thread.handle.needs_heartbeat:
+            monitor.unwatch(sid)
+        if handle is not None and not crashed:
             # normal completion: hand the service back to the lookup
             # (paper Algorithm 2's while-loop: serve one client, re-register)
-            svc.release()
+            handle.release()
+        if handle is not None:
+            handle.close()
 
     def _record_error(self, e: Exception) -> None:
         self._errors.append(e)
@@ -317,12 +359,14 @@ class BasicClient:
                 raise self._errors[0]
         finally:
             self._stop.set()
+            self._stop_monitor()
             if self._unsubscribe:
                 self._unsubscribe()
             with self._threads_lock:
-                services = list(self._recruited.values())
-            for s in services:
-                s.release()
+                handles = list(self._recruited.values())
+            for h in handles:
+                h.release()
+                h.close()
         results = self.repository.results()
         self.output[:] = results
         return self.output
@@ -334,11 +378,11 @@ class BasicClient:
             with self._threads_lock:
                 threads = list(self._threads)
             s["batching"] = {
-                t.service.service_id: {
+                t.handle.service_id: {
                     **t.controller.stats(),
                     "batches_dispatched": t.batches_dispatched,
-                    "cache_hits": t.service.cache_hits,
-                    "cache_misses": t.service.cache_misses,
+                    "cache_hits": t.handle.cache_hits,
+                    "cache_misses": t.handle.cache_misses,
                 } for t in threads}
         return s
 

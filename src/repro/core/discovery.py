@@ -9,23 +9,40 @@ when released.
 
 The registry is in-process here (a TPU fleet has no JVM multicast); swapping
 in etcd/GCS pub-sub means re-implementing exactly these four methods.
+
+What a registration *carries* is an endpoint **address** — an
+``"<scheme>://..."`` string resolved through the transport registry
+(``repro.core.transport``) at recruitment time: ``inproc://<token>`` for
+services living in the client's process, ``proc://host:port`` for worker
+processes launched by ``repro.launch.now``.  The lookup itself never
+touches a live service object, which is what makes discovery, death, and
+rescheduling real rather than simulated.
 """
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+logger = logging.getLogger(__name__)
+
 
 @dataclass
 class ServiceDescriptor:
     service_id: str
-    endpoint: Any  # in-process: the Service object itself
+    endpoint: Any  # "scheme://address" string (legacy: a live Service)
     capabilities: dict = field(default_factory=dict)
     registered_at: float = field(default_factory=time.monotonic)
+    # For inproc endpoints: the live service rides along so that, as in
+    # Jini (where the lookup held the service proxy), a registered service
+    # stays alive exactly as long as something can still discover it.  The
+    # endpoint table itself holds only weak references.  Never resolved
+    # through — resolution goes via the transport registry.
+    keepalive: Any = field(default=None, repr=False, compare=False)
 
     @property
     def n_devices(self) -> int:
@@ -53,7 +70,11 @@ class LookupService:
             try:
                 cb(descriptor)
             except Exception:
-                pass
+                # an observer bug must not break registration for everyone
+                # else, but swallowing it silently hid real recruiter bugs
+                logger.exception(
+                    "lookup observer %r failed while handling registration "
+                    "of %s", cb, descriptor.service_id)
 
     def unregister(self, service_id: str) -> None:
         with self._lock:

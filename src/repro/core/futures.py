@@ -7,7 +7,12 @@ on client side to manage the computation."*
 a ``concurrent.futures.Future`` immediately; the stream can keep growing
 while the farm runs.  Client-side threads scale with the number of
 *services*, never with the number of in-flight tasks (the per-task control
-state lives in the repository + future map, not in a thread)."""
+state lives in the repository + future map, not in a thread).
+
+``shutdown()`` follows ``Executor.shutdown(cancel_futures=True)``
+semantics: every future not yet resolved is cancelled — callers blocked on
+``.result()`` wake up with ``CancelledError`` instead of hanging forever —
+and any later ``submit`` raises ``RuntimeError``."""
 
 from __future__ import annotations
 
@@ -38,12 +43,13 @@ class FarmExecutor:
         self._client.repository = TaskRepository(
             [], lease_s=lease_s, on_complete=self._resolve, streaming=True)
         self._started = False
+        self._shutdown = False
         self._start_lock = threading.Lock()
 
     def _resolve(self, task_id: int, result: Any) -> None:
         with self._flock:
             fut = self._futures.pop(task_id, None)
-        if fut is not None:
+        if fut is not None and not fut.cancelled():
             fut.set_result(result)
 
     def _ensure_started(self) -> None:
@@ -59,10 +65,14 @@ class FarmExecutor:
 
     # ------------------------------------------------------------- #
     def submit(self, task: Any) -> Future:
+        if self._shutdown:
+            raise RuntimeError("cannot submit after shutdown")
         self._ensure_started()
         fut: Future = Future()
         # register the future under the id the repository will assign
         with self._flock:
+            if self._shutdown:  # raced with shutdown(): don't strand it
+                raise RuntimeError("cannot submit after shutdown")
             tid = self._client.repository.add_task(task)
             self._futures[tid] = fut
         return fut
@@ -71,14 +81,25 @@ class FarmExecutor:
         return [self.submit(t) for t in tasks]
 
     def shutdown(self) -> None:
+        """Stop the farm and cancel every unresolved future (callers
+        blocked on ``.result()`` wake up with ``CancelledError``).
+        Idempotent; ``submit`` raises afterwards."""
+        with self._flock:
+            self._shutdown = True
+            stranded = list(self._futures.values())
+            self._futures.clear()
         self._client.repository.close()
         self._client._stop.set()
+        self._client._stop_monitor()
         if self._client._unsubscribe:
             self._client._unsubscribe()
         with self._client._threads_lock:
-            services = list(self._client._recruited.values())
-        for s in services:
-            s.release()
+            handles = list(self._client._recruited.values())
+        for h in handles:
+            h.release()
+            h.close()
+        for fut in stranded:
+            fut.cancel()
 
     def __enter__(self):
         return self

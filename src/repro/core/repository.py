@@ -19,8 +19,10 @@ Extensions beyond the paper (documented in DESIGN.md):
 
 from __future__ import annotations
 
+import heapq
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any
@@ -63,7 +65,12 @@ class TaskRepository:
         self.streaming = streaming  # open-ended stream (FarmExecutor)
         self._closed = False
         self.records = {i: TaskRecord(i, t) for i, t in enumerate(tasks)}
-        self._pending: list[int] = list(self.records.keys())
+        # deque: every lease pops from the head and every reschedule pushes
+        # to the tail — list.pop(0) was O(n) per lease under batched dispatch
+        self._pending: deque[int] = deque(self.records.keys())
+        # (deadline, task_id) min-heap with lazy deletion: expiry scans only
+        # the actually-expired prefix instead of the full record table
+        self._lease_heap: list[tuple[float, int]] = []
         self._done_count = 0
         self._durations: list[float] = []
         self.completions_per_service: dict[str, int] = {}
@@ -96,6 +103,15 @@ class TaskRepository:
             self._lock.notify_all()
             return tid
 
+    def _lease_locked(self, rec: TaskRecord, service_id: str,
+                      now: float) -> None:
+        rec.state = TaskState.LEASED
+        rec.owners.add(service_id)
+        rec.lease_start = now
+        rec.lease_deadline = now + self.lease_s
+        rec.attempts += 1
+        heapq.heappush(self._lease_heap, (rec.lease_deadline, rec.task_id))
+
     # ------------------------------------------------------------- #
     def get_task(self, service_id: str, *, timeout: float = 0.5,
                  allow_speculation: bool = True):
@@ -111,14 +127,9 @@ class TaskRepository:
                         and not (self.streaming and not self._closed)):
                     return None
                 if self._pending:
-                    tid = self._pending.pop(0)
+                    tid = self._pending.popleft()
                     rec = self.records[tid]
-                    now = time.monotonic()
-                    rec.state = TaskState.LEASED
-                    rec.owners.add(service_id)
-                    rec.lease_start = now
-                    rec.lease_deadline = now + self.lease_s
-                    rec.attempts += 1
+                    self._lease_locked(rec, service_id, time.monotonic())
                     return tid, rec.payload
                 if allow_speculation:
                     tid = self._speculation_candidate_locked(service_id)
@@ -165,7 +176,7 @@ class TaskRepository:
                     group_key: Any = _UNSET  # `compatible` may return None
                     now = time.monotonic()
                     while self._pending and len(batch) < max_batch:
-                        tid = self._pending.pop(0)
+                        tid = self._pending.popleft()
                         rec = self.records[tid]
                         if compatible is None:
                             key = None
@@ -179,13 +190,10 @@ class TaskRepository:
                         elif key != group_key:
                             skipped.append(tid)
                             continue
-                        rec.state = TaskState.LEASED
-                        rec.owners.add(service_id)
-                        rec.lease_start = now
-                        rec.lease_deadline = now + self.lease_s
-                        rec.attempts += 1
+                        self._lease_locked(rec, service_id, now)
                         batch.append((tid, rec.payload))
-                    self._pending[:0] = skipped
+                    # skipped tasks go back to the head, original order
+                    self._pending.extendleft(reversed(skipped))
                     if batch:
                         return batch
                 if allow_speculation:
@@ -277,13 +285,44 @@ class TaskRepository:
                 self._lock.notify_all()
 
     def _expire_leases_locked(self) -> None:
+        """Re-enqueue leases past their deadline.
+
+        Pops only the expired prefix of the deadline heap — O(k log n)
+        per call instead of the full-table scan, which was O(n) on
+        *every* get_task/get_batch wakeup.  Heap entries are lazily
+        deleted: a record that was completed, failed back, or re-leased
+        since its entry was pushed no longer matches on
+        (state, deadline) and is skipped."""
         now = time.monotonic()
-        for rec in self.records.values():
-            if rec.state == TaskState.LEASED and now > rec.lease_deadline:
-                rec.owners.clear()
-                rec.state = TaskState.PENDING
-                self._pending.append(rec.task_id)
-                self.reschedules += 1
+        while self._lease_heap and self._lease_heap[0][0] <= now:
+            deadline, tid = heapq.heappop(self._lease_heap)
+            rec = self.records[tid]
+            if rec.state != TaskState.LEASED or rec.lease_deadline != deadline:
+                continue  # stale entry
+            rec.owners.clear()
+            rec.state = TaskState.PENDING
+            self._pending.append(tid)
+            self.reschedules += 1
+
+    def expire_service(self, service_id: str) -> int:
+        """Heartbeat-declared death: expire every lease held (solely) by
+        ``service_id`` *now* instead of waiting out the lease deadline.
+        This is the LivenessMonitor -> lease machinery hook; returns the
+        number of tasks re-enqueued."""
+        expired = 0
+        with self._lock:
+            for rec in self.records.values():
+                if rec.state != TaskState.LEASED or service_id not in rec.owners:
+                    continue
+                rec.owners.discard(service_id)
+                if not rec.owners:
+                    rec.state = TaskState.PENDING
+                    self._pending.append(rec.task_id)
+                    self.reschedules += 1
+                    expired += 1
+            if expired:
+                self._lock.notify_all()
+        return expired
 
     # ------------------------------------------------------------- #
     def wait_all(self, timeout: float | None = None) -> bool:

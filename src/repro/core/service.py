@@ -13,6 +13,14 @@ a pod slice) and executes *compiled* programs on task payloads.  Fault
 injection (``kill``, ``fail_after``) and a speed factor (heterogeneous
 clusters) are built in for the paper's fault-tolerance and load-balancing
 experiments.
+
+Since the transport refactor this class is the *execution engine* only:
+clients never hold it directly, they hold a ``ServiceHandle`` resolved
+from the registered endpoint address.  In-process, the handle delegates
+straight to this object (``inproc://`` — zero-copy, the default); in a
+NoW deployment the same object runs inside a spawned worker process
+behind ``repro.core.transport.proc.ServiceWorker``, in which case it is
+constructed with ``lookup=None`` (registration is the launcher's job).
 """
 
 from __future__ import annotations
@@ -26,15 +34,13 @@ import jax
 from .batching import (pad_stacked, payload_signature, stack_payloads,
                        unstack_results)
 from .discovery import LookupService, ServiceDescriptor, new_service_id
+from .errors import ServiceFailure  # noqa: F401  (re-exported: old import path)
 from .skeletons import Program
-
-
-class ServiceFailure(RuntimeError):
-    """Raised to a control thread when the service has died."""
+from .transport.inproc import register_local
 
 
 class Service:
-    def __init__(self, lookup: LookupService, *, devices=None,
+    def __init__(self, lookup: LookupService | None, *, devices=None,
                  service_id: str | None = None, speed_factor: float = 1.0,
                  capabilities: dict | None = None,
                  task_delay_s: float = 0.0):
@@ -47,6 +53,10 @@ class Service:
                 "speed_factor": speed_factor}
         caps.update(capabilities or {})
         self.capabilities = caps
+
+        # endpoint token is per-instance: stale descriptors must never
+        # resolve to a newer service that reused the same service_id
+        self._endpoint_token = register_local(self)
 
         self._lock = threading.Lock()
         self._alive = True
@@ -67,10 +77,18 @@ class Service:
     # ---------------- lifecycle (Algorithm 2) ------------------------ #
     def start(self) -> None:
         """Register into the lookup and wait for requests."""
-        self.lookup.register(self.descriptor())
+        if self.lookup is not None:
+            self.lookup.register(self.descriptor())
 
     def descriptor(self) -> ServiceDescriptor:
-        return ServiceDescriptor(self.service_id, self, dict(self.capabilities))
+        """Endpoint is an *address*, resolved through the transport
+        registry at recruitment — never the live object.  ``keepalive``
+        pins this service while it sits in a lookup (the endpoint table is
+        weak; see ``transport/inproc.py``)."""
+        return ServiceDescriptor(self.service_id,
+                                 f"inproc://{self._endpoint_token}",
+                                 dict(self.capabilities),
+                                 keepalive=self)
 
     def recruit(self, client_id: str) -> bool:
         """A client claims this service; it unregisters (single-client)."""
@@ -78,7 +96,8 @@ class Service:
             if not self._alive or self._recruited_by is not None:
                 return False
             self._recruited_by = client_id
-        self.lookup.unregister(self.service_id)
+        if self.lookup is not None:
+            self.lookup.unregister(self.service_id)
         return True
 
     def release(self) -> None:
@@ -87,7 +106,8 @@ class Service:
             self._recruited_by = None
             if not self._alive:
                 return
-        self.lookup.register(self.descriptor())
+        if self.lookup is not None:
+            self.lookup.register(self.descriptor())
 
     # ---------------- execution -------------------------------------- #
     def prepare(self, program: Program) -> None:
@@ -202,14 +222,16 @@ class Service:
     def kill(self) -> None:
         with self._lock:
             self._alive = False
-        self.lookup.unregister(self.service_id)
+        if self.lookup is not None:
+            self.lookup.unregister(self.service_id)
 
     def revive(self) -> None:
         with self._lock:
             self._alive = True
             self._fail_after = None
             self._recruited_by = None
-        self.lookup.register(self.descriptor())
+        if self.lookup is not None:
+            self.lookup.register(self.descriptor())
 
     def fail_after(self, n_tasks: int) -> None:
         with self._lock:

@@ -1,0 +1,19 @@
+"""Pluggable farm transports.
+
+``resolve_handle(descriptor, lookup=...)`` turns a registered endpoint
+address into a :class:`ServiceHandle`; the layers above (control threads,
+clients, executors) only ever see the handle.  Importing this package
+registers the two built-in backends:
+
+- ``inproc://`` — the live-object zero-copy backend (default);
+- ``proc://``   — one OS process per service, length-prefixed
+  msgpack/pickle frames over TCP (workers spawned by
+  :class:`repro.launch.now.NowPool`).
+"""
+
+from .base import (LivenessMonitor, ServiceHandle, Transport,  # noqa: F401
+                   get_transport, register_transport, resolve_handle)
+from .inproc import InProcessTransport, InProcHandle  # noqa: F401
+from .proc import ProcHandle, ProcTransport, ServiceWorker  # noqa: F401
+from .wire import (dump_program, dump_pytree, load_program,  # noqa: F401
+                   load_pytree, recv_frame, send_frame)

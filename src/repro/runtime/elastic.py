@@ -63,6 +63,15 @@ class PodFailureDetector:
         self.timeout_s = timeout_s
         self._last = {p: self._clock() for p in pod_ids}
 
+    def add_pod(self, pod_id) -> None:
+        """Start tracking a pod (counts as a fresh heartbeat).  Used by the
+        farm transport's LivenessMonitor, which watches a changing set of
+        recruited services rather than a fixed fleet."""
+        self._last[pod_id] = self._clock()
+
+    def remove_pod(self, pod_id) -> None:
+        self._last.pop(pod_id, None)
+
     def heartbeat(self, pod_id) -> None:
         self._last[pod_id] = self._clock()
 

@@ -1,5 +1,7 @@
 """LookupService: the Jini protocol (register/query/subscribe/unregister)."""
 
+import logging
+
 from repro.core import LookupService, Service, ServiceDescriptor
 
 
@@ -36,6 +38,47 @@ def test_service_recruit_unregisters_and_release_reregisters():
     assert svc.recruit("client-2") is False
     svc.release()
     assert len(lk) == 1
+
+
+def test_observer_exception_is_logged_and_register_survives(caplog):
+    lk = LookupService()
+    seen = []
+    lk.subscribe(lambda d: (_ for _ in ()).throw(RuntimeError("observer bug")))
+    lk.subscribe(lambda d: seen.append(d.service_id))
+    with caplog.at_level(logging.ERROR, logger="repro.core.discovery"):
+        lk.register(ServiceDescriptor("a", None))
+    # the broken observer is reported, not silently swallowed ...
+    assert any("observer" in rec.message and "a" in rec.message
+               for rec in caplog.records)
+    # ... and neither the registration nor the other observer is hurt
+    assert [d.service_id for d in lk.query()] == ["a"]
+    assert seen == ["a"]
+
+
+def test_unsubscribe_during_register_callback(caplog):
+    """Regression: an observer that unsubscribes (itself or another)
+    while `register` is iterating observers must not deadlock or error."""
+    lk = LookupService()
+    seen = []
+    handles = {}
+
+    def volatile(desc):
+        handles["self"]()   # self-unsubscribe under register
+        handles["other"]()  # and unsubscribe the *other* observer too
+        seen.append(("volatile", desc.service_id))
+        raise RuntimeError("and then it dies")
+
+    handles["self"] = lk.subscribe(volatile)
+    handles["other"] = lk.subscribe(
+        lambda d: seen.append(("other", d.service_id)))
+    with caplog.at_level(logging.ERROR, logger="repro.core.discovery"):
+        lk.register(ServiceDescriptor("a", None))
+    # both observers were snapshot for THIS event; the exception is logged
+    assert ("volatile", "a") in seen and ("other", "a") in seen
+    assert any("observer" in rec.message for rec in caplog.records)
+    # both unsubscribed: the next registration notifies nobody
+    lk.register(ServiceDescriptor("b", None))
+    assert [s for s in seen if s[1] == "b"] == []
 
 
 def test_killed_service_cannot_be_recruited():

@@ -1,0 +1,59 @@
+"""FarmExecutor lifecycle: shutdown must never strand a caller."""
+
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FarmExecutor, LookupService, Program, Service
+
+
+def test_shutdown_cancels_unresolved_futures():
+    lookup = LookupService()  # deliberately empty: nothing will run
+    ex = FarmExecutor(Program(lambda x: x), lookup=lookup)
+    fut = ex.submit(jnp.asarray(1.0))
+    ex.shutdown()
+    assert fut.cancelled()
+    with pytest.raises(CancelledError):
+        fut.result(timeout=5)
+
+
+def test_blocked_result_caller_wakes_on_shutdown():
+    lookup = LookupService()
+    ex = FarmExecutor(Program(lambda x: x), lookup=lookup)
+    fut = ex.submit(jnp.asarray(2.0))
+    outcome: dict = {}
+
+    def waiter():
+        try:
+            outcome["value"] = fut.result(timeout=30)
+        except CancelledError:
+            outcome["cancelled"] = True
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.1)  # let the waiter actually block
+    ex.shutdown()
+    t.join(timeout=5)
+    assert not t.is_alive(), "caller stayed blocked after shutdown"
+    assert outcome.get("cancelled") is True
+
+
+def test_submit_after_shutdown_raises():
+    ex = FarmExecutor(Program(lambda x: x), lookup=LookupService())
+    ex.shutdown()
+    with pytest.raises(RuntimeError, match="shutdown"):
+        ex.submit(jnp.asarray(3.0))
+
+
+def test_shutdown_preserves_already_resolved_results():
+    lookup = LookupService()
+    Service(lookup).start()
+    with FarmExecutor(Program(lambda x: x * 4), lookup=lookup) as ex:
+        fut = ex.submit(jnp.asarray(2.0))
+        assert int(fut.result(timeout=60)) == 8
+    # __exit__ ran shutdown; the resolved future keeps its value
+    assert int(fut.result(timeout=1)) == 8
+    ex.shutdown()  # idempotent

@@ -82,6 +82,54 @@ def test_streaming_repo_waits_for_close():
     assert repo.all_done
 
 
+def test_stale_heap_entry_does_not_resurrect_completed_task():
+    """The deadline heap deletes lazily: a task completed before its
+    deadline must not be rescheduled when the stale entry pops."""
+    repo = TaskRepository(["a"], lease_s=0.05)
+    tid, p = repo.get_task("s1")
+    repo.complete(tid, p, "s1")
+    time.sleep(0.1)  # stale heap entry's deadline passes
+    assert repo.get_task("s2", timeout=0.05) is None  # all done, no revival
+    assert repo.stats()["reschedules"] == 0
+
+
+def test_re_lease_gets_a_fresh_deadline():
+    repo = TaskRepository(["a"], lease_s=0.15)
+    t1, _ = repo.get_task("s1")
+    time.sleep(0.2)
+    t2 = repo.get_task("s2", timeout=1.0)  # expired -> re-leased
+    assert t2 is not None and t2[0] == t1
+    assert repo.stats()["reschedules"] == 1
+    # the first lease's (now stale) heap entry must not expire the fresh
+    # lease that s2 just took
+    assert repo.get_task("s3", timeout=0.05) is None
+    assert repo.stats()["reschedules"] == 1
+
+
+def test_expire_service_requeues_immediately():
+    """LivenessMonitor hook: a heartbeat-declared death frees the dead
+    service's leases without waiting out lease_s."""
+    repo = TaskRepository(["a", "b", "c"], lease_s=60.0)
+    repo.get_task("dead")
+    repo.get_task("dead")
+    t3, _ = repo.get_task("alive")
+    assert repo.expire_service("dead") == 2
+    got = {repo.get_task("alive2")[0], repo.get_task("alive2")[0]}
+    assert got == {0, 1}
+    assert repo.stats()["reschedules"] == 2
+    # the live service's lease was untouched
+    assert repo.records[t3].state.value == "leased"
+
+
+def test_get_batch_skipped_tasks_keep_fifo_order():
+    repo = TaskRepository(["a1", "b1", "a2", "b2"])
+    key = lambda payload: payload[0]  # noqa: E731 - group by first letter
+    batch = repo.get_batch("s1", 4, compatible=key)
+    assert [p for _, p in batch] == ["a1", "a2"]
+    batch2 = repo.get_batch("s1", 4, compatible=key)
+    assert [p for _, p in batch2] == ["b1", "b2"]
+
+
 def test_concurrent_pullers_disjoint_tasks():
     repo = TaskRepository(list(range(50)))
     seen = []
