@@ -47,11 +47,12 @@ def main() -> None:
         return
 
     from benchmarks import (elasticity, farm_scalability, fault_tolerance,
-                            kernels, load_balance, normal_form)
+                            heterogeneous_now, kernels, load_balance,
+                            normal_form)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
-                elasticity, kernels):
+                elasticity, heterogeneous_now, kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
 

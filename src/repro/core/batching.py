@@ -56,6 +56,15 @@ def bucket_size(n: int, max_batch: int) -> int:
     return n if b > max_batch else b
 
 
+def pow2_floor(x: float) -> int:
+    """Largest power of two ≤ x (and ≥ 1) — batch sizes live on the
+    power-of-two lattice so the compile-cache bucketing stays bounded."""
+    b = 1
+    while b * 2 <= x:
+        b *= 2
+    return b
+
+
 def pad_stacked(stacked: Any, n: int, m: int) -> Any:
     """Pad a stacked batch of ``n`` tasks up to ``m`` rows by repeating the
     last row (pure per-row programs never see their neighbours, so the
@@ -80,7 +89,7 @@ def unstack_results(result: Any, n: int) -> list:
 # adaptive batch sizing
 # --------------------------------------------------------------------- #
 class AdaptiveBatchController:
-    """Per-service batch-size hill climber.
+    """Per-service batch-size hill climber, weighted by observed throughput.
 
     Doubles the batch while a batch completes in under half the latency
     target, halves it when a batch overruns the target, holds inside the
@@ -88,6 +97,22 @@ class AdaptiveBatchController:
     two, a monotone latency(batch) curve cannot oscillate: if latency(b)
     < target/2 then latency(2b) <= 2*latency(b) < target for any
     sub-linear-overhead service, so growth lands in (or below) the band.
+
+    Heterogeneity-aware extensions:
+
+    - **Throughput-weighted growth.**  The controller keeps a tasks/second
+      EWMA; on a growth step it jumps straight to the power-of-two floor
+      of ``throughput_ewma × target_latency_s`` (never below the plain
+      doubling), so a fast service reaches its steady-state batch in O(1)
+      growth steps instead of O(log max_batch) — which matters on short
+      streams, where the slow climb is pure lost efficiency.  The jump
+      only fires on under-half-target batches, where ideal ≥ 2×current,
+      so the band-hold stability argument above is untouched.
+    - **Speed-factor capping.**  ``max_batch`` here is per service: the
+      control thread derives it from the descriptor's advertised
+      ``speed_factor`` (``max_batch / speed_factor``, power-of-two floor),
+      so a node known to be k× slower can never hoard a full-size lease
+      near the end of a stream.
     """
 
     def __init__(self, *, min_batch: int = 1, max_batch: int = 64,
@@ -121,14 +146,43 @@ class AdaptiveBatchController:
         if n_tasks < self.batch:
             return
         if elapsed_s < 0.5 * self.target_latency_s:
-            self.batch = min(self.batch * 2, self.max_batch)
+            grown = self.batch * 2
+            suggestion = self._throughput_suggestion()
+            if suggestion is not None:
+                grown = max(grown, suggestion)
+            self.batch = min(grown, self.max_batch)
         elif elapsed_s > self.target_latency_s:
             self.batch = max(self.batch // 2, self.min_batch)
+
+    def _throughput_suggestion(self) -> int | None:
+        """Batch size the observed throughput says would land exactly on
+        the latency target (power-of-two floor); None until the EWMA has
+        seen enough batches to trust."""
+        if self.throughput_ewma is None or self.batches_recorded < 3:
+            return None
+        ideal = self.throughput_ewma * self.target_latency_s
+        if ideal < 1.0:
+            return None
+        return max(self.min_batch, min(pow2_floor(ideal), self.max_batch))
 
     def stats(self) -> dict:
         return {
             "batch": self.batch,
+            "max_batch": self.max_batch,
             "last_latency_s": self.last_latency_s,
             "throughput_ewma": self.throughput_ewma,
             "batches_recorded": self.batches_recorded,
         }
+
+
+def speed_capped_max_batch(max_batch: int, speed_factor: float) -> int:
+    """Per-service lease ceiling from the descriptor's advertised speed
+    factor: a service k× slower than baseline is capped at the power-of-
+    two floor of ``max_batch / k``, so pull scheduling stays sharp on
+    heterogeneous clusters (the paper's NoW case) — a slow node holding a
+    full-size lease at end-of-stream is the one way a pull farm goes
+    idle.  ``speed_factor ≤ 1`` (baseline or faster) keeps the full
+    ceiling."""
+    if speed_factor <= 1.0 or max_batch <= 1:
+        return max_batch
+    return max(1, min(max_batch, pow2_floor(max_batch / speed_factor)))

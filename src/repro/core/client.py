@@ -32,23 +32,29 @@ Control threads are transport-agnostic: they talk to a
 :class:`~repro.core.transport.base.ServiceHandle` resolved from the
 registered endpoint address, so the per-task and batched/AIMD paths run
 unmodified whether the service is an object in this process
-(``inproc://``) or a worker process on the other end of a socket
-(``proc://``).  Handles whose backend can die silently are heartbeated by
-a :class:`~repro.core.transport.base.LivenessMonitor` that expires the
-dead service's repository leases immediately.
+(``inproc://``), a worker process on the other end of a socket
+(``proc://``), or a simulated workstation on a deterministic virtual
+clock (``sim://``).  Handles whose backend can die silently are
+heartbeated by a :class:`~repro.core.transport.base.LivenessMonitor` that
+expires the dead service's repository leases immediately.
+
+Every timestamp and blocking wait goes through ``self.clock``
+(:class:`repro.core.clock.Clock`, wall clock by default) — the seam that
+lets the ``sim://`` backend schedule these exact threads deterministically.
 """
 
 from __future__ import annotations
 
 import threading
-import time
 import uuid
 from collections import deque
 from typing import Any, Callable, Sequence
 
 import jax
 
-from .batching import AdaptiveBatchController, bucket_size, payload_signature
+from .batching import (AdaptiveBatchController, bucket_size,
+                       payload_signature, speed_capped_max_batch)
+from .clock import REAL_CLOCK
 from .discovery import LookupService, ServiceDescriptor
 from .errors import ServiceFailure
 from .normal_form import normal_form_depth, normalize
@@ -66,12 +72,24 @@ class ControlThread(threading.Thread):
         self.handle = handle
         self.tasks_done = 0
         self.batches_dispatched = 0
+        # heterogeneity-aware lease ceiling: a service advertising itself
+        # k× slower (descriptor speed_factor) is capped at max_batch/k, so
+        # it can never hoard a full-size lease near the end of a stream
+        speed = float(handle.capabilities.get("speed_factor") or 1.0)
+        cap = speed_capped_max_batch(client.max_batch, speed)
         self.controller = AdaptiveBatchController(
-            max_batch=client.max_batch,
-            initial=client.max_batch if not client.adaptive_batching else None,
+            max_batch=cap,
+            initial=cap if not client.adaptive_batching else None,
             target_latency_s=client.target_batch_latency_s)
 
     def run(self) -> None:
+        self.client.clock.thread_attach()
+        try:
+            self._run_guarded()
+        finally:
+            self.client.clock.thread_retire()
+
+    def _run_guarded(self) -> None:
         try:
             self.handle.prepare(self.client.program)
         except ServiceFailure:
@@ -128,7 +146,7 @@ class ControlThread(threading.Thread):
             if not isinstance(e, ServiceFailure):
                 self.client._record_error(e)
             return False
-        now = time.monotonic()
+        now = self.client.clock.monotonic()
         # service time, not residence time: with max_inflight > 1 a batch
         # queues behind its predecessors, so time-since-dispatch would be
         # inflated ~max_inflight-fold and collapse the adaptive batch to 1.
@@ -139,6 +157,11 @@ class ControlThread(threading.Thread):
         self._last_drain_end = now
         self.tasks_done += self.client.repository.complete_batch(
             list(zip(task_ids, results)), self.handle.service_id)
+        if self.client.speculation:
+            # observed-throughput feed for straggler detection: a service
+            # whose rate collapses gets its leases speculatively re-issued
+            self.client.repository.report_rate(
+                self.handle.service_id, self.controller.throughput_ewma)
         return True
 
     def _run_batched(self) -> None:
@@ -170,7 +193,7 @@ class ControlThread(threading.Thread):
                 continue
             task_ids = [tid for tid, _ in batch]
             payloads = [p for _, p in batch]
-            t0 = time.monotonic()
+            t0 = self.client.clock.monotonic()
             try:
                 results = self.handle.execute_batch(
                     program, payloads, block=False,
@@ -212,7 +235,8 @@ class BasicClient:
                  lease_s: float = 30.0, speculation: bool = True,
                  elastic: bool = True, max_batch: int = 1,
                  max_inflight: int = 1, adaptive_batching: bool = True,
-                 target_batch_latency_s: float = 0.05):
+                 target_batch_latency_s: float = 0.05, clock=None,
+                 on_lease=None):
         """Batching knobs (beyond-paper hot path; defaults reproduce the
         paper's one-task-per-round-trip dispatch exactly):
 
@@ -228,6 +252,16 @@ class BasicClient:
             leases); ``False`` always leases ``max_batch``.
         target_batch_latency_s
             Latency target per batch for the adaptive controller.
+        clock
+            Every timestamp and blocking wait in the client, its control
+            threads, the repository, and the liveness monitor goes through
+            this :class:`repro.core.clock.Clock`.  Default: wall clock.
+            The ``sim://`` backend passes a deterministic
+            :class:`repro.sim.VirtualClock` here.
+        on_lease
+            Assignment-trace hook, forwarded to the repository:
+            ``(task_id, service_id, attempt, t)`` per lease/speculative
+            issue, in lease order.
         """
         # --- normal-form pre-processing (paper §2) -------------------- #
         if isinstance(program, Skeleton):
@@ -242,8 +276,11 @@ class BasicClient:
         self.program = program
         self.contract = contract
         self.lookup = lookup if lookup is not None else _default_lookup()
+        self.clock = clock if clock is not None else REAL_CLOCK
         self.client_id = f"client-{uuid.uuid4().hex[:8]}"
-        self.repository = TaskRepository(list(input_tasks or []), lease_s=lease_s)
+        self.repository = TaskRepository(list(input_tasks or []),
+                                         lease_s=lease_s, clock=self.clock,
+                                         on_lease=on_lease)
         self.output = output if output is not None else []
         self.speculation = speculation
         self.elastic = elastic
@@ -276,6 +313,9 @@ class BasicClient:
             self._threads.append(thread)
         if handle.needs_heartbeat:
             self._watch(handle)
+        # announce before start: a simulated schedule must know the thread
+        # exists before anyone else blocks (no-op on the real clock)
+        self.clock.thread_spawned(thread)
         thread.start()
         return True
 
@@ -285,7 +325,7 @@ class BasicClient:
         threads re-lease the tasks without sitting out ``lease_s``."""
         with self._threads_lock:
             if self._monitor is None:
-                self._monitor = LivenessMonitor()
+                self._monitor = LivenessMonitor(clock=self.clock)
             monitor = self._monitor
         monitor.watch(handle, self.repository.expire_service)
 
@@ -341,15 +381,15 @@ class BasicClient:
                 # inelastic).
                 if not self.elastic:
                     raise RuntimeError("no services available in lookup")
-            import time as _time
 
-            deadline = None if timeout is None else _time.monotonic() + timeout
+            deadline = (None if timeout is None
+                        else self.clock.monotonic() + timeout)
             while not self.repository.all_done:
                 if self._errors:
                     raise self._errors[0]
                 slice_s = 0.2
                 if deadline is not None:
-                    remaining = deadline - _time.monotonic()
+                    remaining = deadline - self.clock.monotonic()
                     if remaining <= 0:
                         raise TimeoutError(
                             f"farm did not finish: {self.repository.stats()}")

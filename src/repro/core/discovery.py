@@ -52,12 +52,28 @@ class ServiceDescriptor:
     def peak_flops(self) -> float:
         return float(self.capabilities.get("peak_flops", 0.0))
 
+    @property
+    def speed_factor(self) -> float:
+        """Advertised relative per-task cost (1.0 = baseline, 4.0 = four
+        times slower).  The scheduler uses it to cap the service's lease
+        size (``repro.core.batching.speed_capped_max_batch``); observed
+        throughput then refines it at runtime."""
+        return float(self.capabilities.get("speed_factor", 1.0) or 1.0)
+
 
 class LookupService:
-    """The lookup: register / unregister / query / subscribe."""
+    """The lookup: register / unregister / query / subscribe.
 
-    def __init__(self):
-        self._lock = threading.Lock()
+    ``clock`` follows the farm-wide seam (``repro.core.clock``): the
+    blocking :meth:`wait_for_services` and its register/unregister
+    wakeups go through it, so a lookup constructed for a simulation
+    (``SimCluster`` passes its VirtualClock) waits in virtual time."""
+
+    def __init__(self, clock=None):
+        from .clock import REAL_CLOCK
+
+        self._clock = clock if clock is not None else REAL_CLOCK
+        self._lock = threading.Condition()
         self._services: dict[str, ServiceDescriptor] = {}
         self._observers: list[Callable[[ServiceDescriptor], None]] = []
 
@@ -66,6 +82,7 @@ class LookupService:
         with self._lock:
             self._services[descriptor.service_id] = descriptor
             observers = list(self._observers)
+            self._clock.cond_notify_all(self._lock)
         for cb in observers:  # async recruitment path (publish/subscribe)
             try:
                 cb(descriptor)
@@ -79,6 +96,23 @@ class LookupService:
     def unregister(self, service_id: str) -> None:
         with self._lock:
             self._services.pop(service_id, None)
+            self._clock.cond_notify_all(self._lock)
+
+    def wait_for_services(self, n: int, timeout_s: float = 10.0) -> bool:
+        """Block until ≥ ``n`` services are registered (or the timeout
+        lapses; returns False then).  Event-driven: woken by every
+        register/unregister, so tests waiting for an eventually-consistent
+        re-registration (e.g. a released ``proc://`` worker whose release
+        RPC is still in flight) don't sleep-poll — under load the wait
+        stretches, it never misses."""
+        deadline = self._clock.monotonic() + timeout_s
+        with self._lock:
+            while len(self._services) < n:
+                remaining = deadline - self._clock.monotonic()
+                if remaining <= 0:
+                    return False
+                self._clock.cond_wait(self._lock, remaining)
+            return True
 
     # -- client side -------------------------------------------------- #
     def query(self, predicate: Callable[[ServiceDescriptor], bool] | None = None

@@ -31,17 +31,18 @@ class FarmExecutor:
                  lookup: LookupService | None = None, lease_s: float = 30.0,
                  speculation: bool = True, max_batch: int = 1,
                  max_inflight: int = 1, adaptive_batching: bool = True,
-                 target_batch_latency_s: float = 0.05):
+                 target_batch_latency_s: float = 0.05, clock=None):
         self._futures: dict[int, Future] = {}
         self._flock = threading.Lock()
         self._client = BasicClient(
             program, None, [], lookup=lookup, lease_s=lease_s,
             speculation=speculation, max_batch=max_batch,
             max_inflight=max_inflight, adaptive_batching=adaptive_batching,
-            target_batch_latency_s=target_batch_latency_s)
+            target_batch_latency_s=target_batch_latency_s, clock=clock)
         # swap in a streaming completion-callback repository
         self._client.repository = TaskRepository(
-            [], lease_s=lease_s, on_complete=self._resolve, streaming=True)
+            [], lease_s=lease_s, on_complete=self._resolve, streaming=True,
+            clock=self._client.clock)
         self._started = False
         self._shutdown = False
         self._start_lock = threading.Lock()

@@ -11,21 +11,34 @@ Extensions beyond the paper (documented in DESIGN.md):
   * lease timeouts — a recruited service that stops heartbeating loses its
     lease and the task is re-enqueued;
   * speculative re-execution of stragglers (MapReduce-style backup tasks):
-    ``complete`` is idempotent, first result wins;
+    ``complete`` is idempotent, first result wins — a task qualifies either
+    by lease *age* (≥ ``speculation_factor`` × median completion time) or
+    because its sole owner is a declared **rate straggler**: control
+    threads feed observed per-service throughput through ``report_rate``,
+    and a service running below ``straggler_rate_factor`` × the median
+    rate has its leases offered to healthy services immediately;
   * batched leasing — ``get_batch`` hands a service up to N shape-compatible
     tasks in one round-trip so the client can run them as a single
     vmap-compiled call (see ``repro.core.batching``).
+
+Every timestamp and every blocking wait goes through a
+:class:`repro.core.clock.Clock` (wall clock by default), which is what
+lets the ``sim://`` backend run this exact code under a deterministic
+virtual clock.  Waits are additionally capped at the next lease deadline,
+so expiry is event-driven: a service waiting for work wakes *at* the
+instant a lease lapses instead of polling it on an unrelated timeout.
 """
 
 from __future__ import annotations
 
 import heapq
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any
+
+from .clock import REAL_CLOCK
 
 
 _UNSET = object()
@@ -50,6 +63,7 @@ class TaskRecord:
     completed_by: str | None = None
     group_key: Any = None  # memoized compatibility key (see get_batch)
     group_key_set: bool = False
+    straggler_hit: bool = False  # candidate chosen via the rate-straggler arm
 
 
 class TaskRepository:
@@ -57,11 +71,19 @@ class TaskRepository:
 
     def __init__(self, tasks: list, *, lease_s: float = 30.0,
                  speculation_factor: float = 3.0, on_complete=None,
-                 streaming: bool = False):
+                 streaming: bool = False, clock=None, on_lease=None,
+                 straggler_rate_factor: float = 0.5):
         self._lock = threading.Condition()
+        self._clock = clock if clock is not None else REAL_CLOCK
         self.lease_s = lease_s
         self.speculation_factor = speculation_factor
+        self.straggler_rate_factor = straggler_rate_factor
         self.on_complete = on_complete  # callable(task_id, result)
+        # assignment-trace hook: callable(task_id, service_id, attempt, t)
+        # fired on every lease and speculative issue.  Called under the
+        # repository lock so the trace order IS the lease order — keep it
+        # cheap and never call back into the repository from it.
+        self.on_lease = on_lease
         self.streaming = streaming  # open-ended stream (FarmExecutor)
         self._closed = False
         self.records = {i: TaskRecord(i, t) for i, t in enumerate(tasks)}
@@ -73,9 +95,11 @@ class TaskRepository:
         self._lease_heap: list[tuple[float, int]] = []
         self._done_count = 0
         self._durations: list[float] = []
+        self._service_rates: dict[str, float] = {}  # observed tasks/second
         self.completions_per_service: dict[str, int] = {}
         self.reschedules = 0
         self.speculative_issues = 0
+        self.straggler_speculations = 0
 
     # ------------------------------------------------------------- #
     def __len__(self) -> int:
@@ -92,7 +116,7 @@ class TaskRepository:
         """End a streaming repository: no more tasks will be added."""
         with self._lock:
             self._closed = True
-            self._lock.notify_all()
+            self._clock.cond_notify_all(self._lock)
 
     def add_task(self, payload) -> int:
         """Streams can grow while the farm runs."""
@@ -100,7 +124,7 @@ class TaskRepository:
             tid = len(self.records)
             self.records[tid] = TaskRecord(tid, payload)
             self._pending.append(tid)
-            self._lock.notify_all()
+            self._clock.cond_notify_all(self._lock)
             return tid
 
     def _lease_locked(self, rec: TaskRecord, service_id: str,
@@ -111,6 +135,8 @@ class TaskRepository:
         rec.lease_deadline = now + self.lease_s
         rec.attempts += 1
         heapq.heappush(self._lease_heap, (rec.lease_deadline, rec.task_id))
+        if self.on_lease is not None:
+            self.on_lease(rec.task_id, service_id, rec.attempts, now)
 
     # ------------------------------------------------------------- #
     def get_task(self, service_id: str, *, timeout: float = 0.5,
@@ -119,7 +145,7 @@ class TaskRepository:
         straggler).  Returns (task_id, payload) or None if the stream is
         exhausted (all tasks done) — a None with ``all_done`` False means
         "try again" (everything currently leased)."""
-        deadline = time.monotonic() + timeout
+        deadline = self._clock.monotonic() + timeout
         with self._lock:
             while True:
                 self._expire_leases_locked()
@@ -129,20 +155,18 @@ class TaskRepository:
                 if self._pending:
                     tid = self._pending.popleft()
                     rec = self.records[tid]
-                    self._lease_locked(rec, service_id, time.monotonic())
+                    self._lease_locked(rec, service_id,
+                                       self._clock.monotonic())
                     return tid, rec.payload
                 if allow_speculation:
                     tid = self._speculation_candidate_locked(service_id)
                     if tid is not None:
-                        rec = self.records[tid]
-                        rec.owners.add(service_id)
-                        rec.attempts += 1
-                        self.speculative_issues += 1
-                        return tid, rec.payload
-                remaining = deadline - time.monotonic()
+                        self._issue_speculative_locked(tid, service_id)
+                        return tid, self.records[tid].payload
+                remaining = deadline - self._clock.monotonic()
                 if remaining <= 0:
                     return None
-                self._lock.wait(remaining)
+                self._wait_locked(remaining)
 
     def get_batch(self, service_id: str, max_batch: int, *,
                   timeout: float = 0.5, allow_speculation: bool = True,
@@ -163,7 +187,7 @@ class TaskRepository:
             got = self.get_task(service_id, timeout=timeout,
                                 allow_speculation=allow_speculation)
             return None if got is None else [got]
-        deadline = time.monotonic() + timeout
+        deadline = self._clock.monotonic() + timeout
         with self._lock:
             while True:
                 self._expire_leases_locked()
@@ -174,7 +198,7 @@ class TaskRepository:
                     batch: list = []
                     skipped: list[int] = []
                     group_key: Any = _UNSET  # `compatible` may return None
-                    now = time.monotonic()
+                    now = self._clock.monotonic()
                     while self._pending and len(batch) < max_batch:
                         tid = self._pending.popleft()
                         rec = self.records[tid]
@@ -199,30 +223,87 @@ class TaskRepository:
                 if allow_speculation:
                     tid = self._speculation_candidate_locked(service_id)
                     if tid is not None:
-                        rec = self.records[tid]
-                        rec.owners.add(service_id)
-                        rec.attempts += 1
-                        self.speculative_issues += 1
-                        return [(tid, rec.payload)]
-                remaining = deadline - time.monotonic()
+                        self._issue_speculative_locked(tid, service_id)
+                        return [(tid, self.records[tid].payload)]
+                remaining = deadline - self._clock.monotonic()
                 if remaining <= 0:
                     return None
-                self._lock.wait(remaining)
+                self._wait_locked(remaining)
+
+    def _wait_locked(self, remaining: float) -> None:
+        """Block until notified, but never past the next lease deadline —
+        expiry is then event-driven (the waiter that wakes at the deadline
+        re-enqueues the lapsed lease itself) instead of depending on an
+        unrelated notify or the caller's poll timeout."""
+        if self._lease_heap:
+            next_deadline = self._lease_heap[0][0] - self._clock.monotonic()
+            # expired entries were popped at loop top, so next_deadline > 0
+            remaining = min(remaining, max(next_deadline, 1e-6))
+        self._clock.cond_wait(self._lock, remaining)
+
+    def _stragglers_locked(self) -> set:
+        """Services whose observed completion rate has fallen below
+        ``straggler_rate_factor`` × the median across reporting services
+        (needs ≥ 2 reporters for a median to mean anything)."""
+        if len(self._service_rates) < 2:
+            return set()
+        rates = sorted(self._service_rates.values())
+        med = rates[len(rates) // 2]
+        cutoff = self.straggler_rate_factor * med
+        return {s for s, r in self._service_rates.items() if r < cutoff}
 
     def _speculation_candidate_locked(self, service_id: str):
-        """A task leased for >= speculation_factor × median completion time,
-        not already being computed by this service."""
-        if len(self._durations) < 3:
-            return None
-        med = sorted(self._durations)[len(self._durations) // 2]
-        now = time.monotonic()
+        """A re-executable straggler task: leased for ≥ speculation_factor
+        × the median completion time, OR held solely by a service whose
+        reported throughput marks it a rate straggler.  Never a task this
+        service already owns, never a third copy."""
+        age_ok = len(self._durations) >= 3
+        med = (sorted(self._durations)[len(self._durations) // 2]
+               if age_ok else 0.0)
+        stragglers = self._stragglers_locked()
+        if service_id in stragglers:
+            return None  # a slow node must not duplicate others' work
+        now = self._clock.monotonic()
         for rec in self.records.values():
-            if (rec.state == TaskState.LEASED
-                    and service_id not in rec.owners
-                    and len(rec.owners) < 2
-                    and now - rec.lease_start > self.speculation_factor * max(med, 1e-3)):
+            if (rec.state != TaskState.LEASED
+                    or service_id in rec.owners
+                    or len(rec.owners) >= 2):
+                continue
+            if (age_ok and now - rec.lease_start
+                    > self.speculation_factor * max(med, 1e-3)):
+                return rec.task_id
+            if rec.owners and rec.owners <= stragglers:
+                rec.straggler_hit = True
                 return rec.task_id
         return None
+
+    def _issue_speculative_locked(self, tid: int, service_id: str) -> None:
+        rec = self.records[tid]
+        rec.owners.add(service_id)
+        rec.attempts += 1
+        self.speculative_issues += 1
+        if rec.straggler_hit:
+            rec.straggler_hit = False
+            self.straggler_speculations += 1
+        if self.on_lease is not None:
+            self.on_lease(tid, service_id, rec.attempts,
+                          self._clock.monotonic())
+
+    def report_rate(self, service_id: str, tasks_per_s: float | None) -> None:
+        """Control threads report observed per-service throughput here
+        (the AIMD controller's EWMA); it feeds straggler detection —
+        the heterogeneity-aware arm of speculation."""
+        if tasks_per_s is None:
+            return
+        with self._lock:
+            before = self._stragglers_locked()
+            self._service_rates[service_id] = tasks_per_s
+            # wake waiters only when the straggler set actually changed
+            # (a service just crossed the cutoff, either way) — rates are
+            # reported once per drained batch, and an unconditional
+            # notify here would double every batch's wakeup storm
+            if self._stragglers_locked() != before:
+                self._clock.cond_notify_all(self._lock)
 
     # ------------------------------------------------------------- #
     def complete(self, task_id: int, result, service_id: str) -> bool:
@@ -236,10 +317,10 @@ class TaskRepository:
             rec.result = result
             rec.completed_by = service_id
             self._done_count += 1
-            self._durations.append(time.monotonic() - rec.lease_start)
+            self._durations.append(self._clock.monotonic() - rec.lease_start)
             self.completions_per_service[service_id] = (
                 self.completions_per_service.get(service_id, 0) + 1)
-            self._lock.notify_all()
+            self._clock.cond_notify_all(self._lock)
         if self.on_complete is not None:
             self.on_complete(task_id, result)
         return True
@@ -252,7 +333,7 @@ class TaskRepository:
         ``complete``)."""
         recorded: list[tuple[int, Any]] = []
         with self._lock:
-            now = time.monotonic()
+            now = self._clock.monotonic()
             for task_id, result in results:
                 rec = self.records[task_id]
                 if rec.state == TaskState.DONE:
@@ -266,7 +347,7 @@ class TaskRepository:
                     self.completions_per_service.get(service_id, 0) + 1)
                 recorded.append((task_id, result))
             if recorded:
-                self._lock.notify_all()
+                self._clock.cond_notify_all(self._lock)
         if self.on_complete is not None:
             for task_id, result in recorded:
                 self.on_complete(task_id, result)
@@ -282,7 +363,7 @@ class TaskRepository:
                 rec.state = TaskState.PENDING
                 self._pending.append(task_id)
                 self.reschedules += 1
-                self._lock.notify_all()
+                self._clock.cond_notify_all(self._lock)
 
     def _expire_leases_locked(self) -> None:
         """Re-enqueue leases past their deadline.
@@ -293,7 +374,7 @@ class TaskRepository:
         deleted: a record that was completed, failed back, or re-leased
         since its entry was pushed no longer matches on
         (state, deadline) and is skipped."""
-        now = time.monotonic()
+        now = self._clock.monotonic()
         while self._lease_heap and self._lease_heap[0][0] <= now:
             deadline, tid = heapq.heappop(self._lease_heap)
             rec = self.records[tid]
@@ -321,34 +402,61 @@ class TaskRepository:
                     self.reschedules += 1
                     expired += 1
             if expired:
-                self._lock.notify_all()
+                self._clock.cond_notify_all(self._lock)
         return expired
 
     # ------------------------------------------------------------- #
     def wait_all(self, timeout: float | None = None) -> bool:
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = (None if timeout is None
+                    else self._clock.monotonic() + timeout)
         with self._lock:
             while self._done_count < len(self.records):
-                remaining = None if deadline is None else deadline - time.monotonic()
+                remaining = (None if deadline is None
+                             else deadline - self._clock.monotonic())
                 if remaining is not None and remaining <= 0:
                     return False
-                self._lock.wait(remaining if remaining is not None else 1.0)
+                self._clock.cond_wait(
+                    self._lock, remaining if remaining is not None else 1.0)
+            return True
+
+    def wait_until(self, predicate, timeout: float | None = None) -> bool:
+        """Event-driven wait for an arbitrary progress condition:
+        ``predicate(stats_dict)`` is re-evaluated on every repository
+        state change (completions, reschedules, leases expiring).  Tests
+        use this instead of sleep-polling loops — under load the wait
+        stretches, but it can never miss the event or flake."""
+        deadline = (None if timeout is None
+                    else self._clock.monotonic() + timeout)
+        with self._lock:
+            while not predicate(self._stats_locked()):
+                remaining = (None if deadline is None
+                             else deadline - self._clock.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._clock.cond_wait(
+                    self._lock, min(remaining, 0.5) if remaining is not None
+                    else 0.5)
             return True
 
     def results(self) -> list:
         with self._lock:
             return [self.records[i].result for i in sorted(self.records)]
 
+    def _stats_locked(self) -> dict:
+        leased = sum(1 for r in self.records.values()
+                     if r.state == TaskState.LEASED)
+        return {
+            "tasks": len(self.records),
+            "done": self._done_count,
+            "pending": len(self._pending),
+            "leased": leased,
+            "reschedules": self.reschedules,
+            "speculative_issues": self.speculative_issues,
+            "straggler_speculations": self.straggler_speculations,
+            "service_rates": dict(self._service_rates),
+            "per_service": dict(self.completions_per_service),
+        }
+
     def stats(self) -> dict:
         with self._lock:
-            leased = sum(1 for r in self.records.values()
-                         if r.state == TaskState.LEASED)
-            return {
-                "tasks": len(self.records),
-                "done": self._done_count,
-                "pending": len(self._pending),
-                "leased": leased,
-                "reschedules": self.reschedules,
-                "speculative_issues": self.speculative_issues,
-                "per_service": dict(self.completions_per_service),
-            }
+            return self._stats_locked()

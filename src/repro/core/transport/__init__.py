@@ -8,12 +8,17 @@ registers the two built-in backends:
 - ``inproc://`` — the live-object zero-copy backend (default);
 - ``proc://``   — one OS process per service, length-prefixed
   msgpack/pickle frames over TCP (workers spawned by
-  :class:`repro.launch.now.NowPool`).
+  :class:`repro.launch.now.NowPool`);
+- ``sim://``    — deterministic simulated services on a virtual clock
+  (clusters stood up by :class:`repro.sim.SimCluster` /
+  :class:`repro.launch.sim.SimPool`), for reproducible scheduling and
+  fault experiments.
 """
 
 from .base import (LivenessMonitor, ServiceHandle, Transport,  # noqa: F401
                    get_transport, register_transport, resolve_handle)
 from .inproc import InProcessTransport, InProcHandle  # noqa: F401
 from .proc import ProcHandle, ProcTransport, ServiceWorker  # noqa: F401
+from .sim import SimHandle, SimTransport  # noqa: F401
 from .wire import (dump_program, dump_pytree, load_program,  # noqa: F401
                    load_pytree, recv_frame, send_frame)

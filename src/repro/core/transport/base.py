@@ -142,11 +142,15 @@ class LivenessMonitor:
     client wires this to ``TaskRepository.expire_service``, so the dead
     node's leases re-enqueue immediately) and the handle is dropped."""
 
-    def __init__(self, *, interval_s: float = 0.25, timeout_s: float = 1.5):
+    def __init__(self, *, interval_s: float = 0.25, timeout_s: float = 1.5,
+                 clock=None):
+        from repro.core.clock import REAL_CLOCK
         from repro.runtime.elastic import PodFailureDetector
 
         self.interval_s = interval_s
-        self._detector = PodFailureDetector([], timeout_s=timeout_s)
+        self._clock = clock if clock is not None else REAL_CLOCK
+        self._detector = PodFailureDetector([], timeout_s=timeout_s,
+                                            clock=self._clock.monotonic)
         self._lock = threading.Lock()
         self._watched: dict[str, tuple[ServiceHandle, Callable[[str], None]]] = {}
         self._stop = threading.Event()
@@ -161,6 +165,7 @@ class LivenessMonitor:
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._run, daemon=True, name="liveness-monitor")
+                self._clock.thread_spawned(self._thread)
                 self._thread.start()
 
     def unwatch(self, service_id: str) -> None:
@@ -169,10 +174,17 @@ class LivenessMonitor:
             self._detector.remove_pod(service_id)
 
     def stop(self) -> None:
-        self._stop.set()
+        self._clock.event_set(self._stop)
 
     def _run(self) -> None:
-        while not self._stop.wait(self.interval_s):
+        self._clock.thread_attach()
+        try:
+            self._run_loop()
+        finally:
+            self._clock.thread_retire()
+
+    def _run_loop(self) -> None:
+        while not self._clock.event_wait(self._stop, self.interval_s):
             with self._lock:
                 watched = list(self._watched.items())
             for sid, (handle, _) in watched:

@@ -12,7 +12,9 @@ import pytest
 from repro.core import (AdaptiveBatchController, BasicClient, Farm,
                         LookupService, Pipe, Program, Seq, Service,
                         TaskRepository, interpret, payload_signature)
-from repro.core.batching import bucket_size, pad_stacked, stack_payloads
+from repro.core.batching import (bucket_size, pad_stacked, pow2_floor,
+                                 speed_capped_max_batch, stack_payloads,
+                                 unstack_results)
 
 
 # ------------------------------------------------------------------ #
@@ -77,6 +79,38 @@ def test_bucket_size_powers_of_two():
         [1, 2, 4, 8, 8, 16, 16]
     # beyond the cap: no padding (the lease itself never exceeds max_batch)
     assert bucket_size(12, 12) == 12
+
+
+def test_bucket_padding_at_exact_power_of_two_boundary_is_noop():
+    """A lease that already sits on a bucket boundary must not pad: the
+    bucket is its own size, and pad_stacked returns the input untouched
+    (no copy, no extra rows computed)."""
+    for n in (1, 2, 4, 8):
+        assert bucket_size(n, 8) == n
+    stacked = stack_payloads([jnp.asarray([float(i)]) for i in range(8)])
+    assert pad_stacked(stacked, 8, 8) is stacked
+    svc = _service()
+    prog = Program(lambda x: x + 1, name="incb")
+    out = svc.execute_batch(prog, [jnp.asarray(float(i)) for i in range(8)],
+                            pad_to=8)
+    assert [float(v) for v in out] == [i + 1.0 for i in range(8)]
+    assert svc.tasks_executed == 8
+
+
+def test_unstack_results_on_scalar_leaf_pytrees():
+    """A vmapped scalar program returns shape-(n,) leaves; unstacking must
+    yield 0-d per-task results (not 1-element arrays), across arbitrary
+    pytree structure."""
+    batched = {"y": jnp.arange(3.0), "aux": (jnp.asarray([10, 20, 30]),)}
+    rows = unstack_results(batched, 3)
+    assert len(rows) == 3
+    assert rows[1]["y"].shape == ()
+    assert float(rows[1]["y"]) == 1.0
+    assert int(rows[2]["aux"][0]) == 30
+    # and a stack -> unstack roundtrip of 0-d payloads is the identity
+    payloads = [{"x": jnp.asarray(float(i))} for i in range(4)]
+    rows2 = unstack_results(stack_payloads(payloads), 4)
+    assert [float(r["x"]) for r in rows2] == [0.0, 1.0, 2.0, 3.0]
 
 
 def test_pad_stacked_repeats_last_row():
@@ -191,6 +225,66 @@ def test_controller_ignores_partial_tail_batches():
     c = AdaptiveBatchController(max_batch=8, initial=8, target_latency_s=0.1)
     c.record(2, 5.0)  # a tiny tail batch that took forever
     assert c.next_batch() == 8  # not evidence about full leases
+
+
+def test_controller_pinned_when_min_equals_max():
+    """min_batch == max_batch leaves no room to steer: whatever the
+    latency says, the batch must stay pinned (and never crash)."""
+    c = AdaptiveBatchController(min_batch=4, max_batch=4,
+                                target_latency_s=0.1)
+    assert c.next_batch() == 4
+    for elapsed in (0.0, 0.001, 0.1, 50.0):
+        c.record(4, elapsed)
+        assert c.next_batch() == 4
+    assert c.batches_recorded == 4
+
+
+def test_controller_zero_elapsed_record_is_safe():
+    """A batch observed at 0 elapsed (virtual clock tick, or clock
+    granularity) must not divide by zero; it reads as infinitely fast and
+    grows the batch."""
+    c = AdaptiveBatchController(max_batch=16, initial=1,
+                                target_latency_s=0.1)
+    c.record(1, 0.0)
+    assert c.next_batch() == 2
+    assert c.throughput_ewma > 0
+    c.record(0, 1.0)  # n_tasks=0 is a no-op, not a crash
+    assert c.batches_recorded == 1
+
+
+def test_controller_throughput_jump_skips_doubling_ladder():
+    """Once the throughput EWMA is trusted (3 batches), a growth step
+    jumps straight to the throughput-implied batch instead of doubling —
+    O(1) convergence for fast services on short streams."""
+    c = AdaptiveBatchController(max_batch=64, target_latency_s=0.1)
+    for _ in range(3):  # establish the EWMA at ~1000 tasks/s
+        c.record(c.next_batch(), c.next_batch() * 0.001)
+    # growth step: ideal = ~1000 * 0.1 = ~100 -> pow2 floor capped at 64,
+    # far beyond the plain doubling (4 -> 8)
+    assert c.next_batch() > 8
+
+
+def test_controller_bad_bounds_rejected():
+    with pytest.raises(ValueError):
+        AdaptiveBatchController(min_batch=0)
+    with pytest.raises(ValueError):
+        AdaptiveBatchController(min_batch=8, max_batch=4)
+
+
+def test_speed_capped_max_batch():
+    # slower services get power-of-two-floored caps; baseline and faster
+    # keep the full ceiling; the cap never drops below one task
+    assert speed_capped_max_batch(16, 1.0) == 16
+    assert speed_capped_max_batch(16, 0.5) == 16
+    assert speed_capped_max_batch(16, 2.0) == 8
+    assert speed_capped_max_batch(16, 3.0) == 4   # 16/3 = 5.33 -> 4
+    assert speed_capped_max_batch(16, 40.0) == 1
+    assert speed_capped_max_batch(1, 8.0) == 1
+
+
+def test_pow2_floor():
+    assert [pow2_floor(x) for x in (0.1, 1, 1.9, 2, 3, 8, 9, 1000)] == \
+        [1, 1, 1, 2, 2, 8, 8, 512]
 
 
 # ------------------------------------------------------------------ #

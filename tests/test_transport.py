@@ -3,7 +3,6 @@ backend — real worker processes, real sockets, real SIGKILL."""
 
 import socket
 import threading
-import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -104,19 +103,26 @@ class _FakeHandle:
 
 
 def test_liveness_monitor_expires_dead_services_leases():
-    repo = TaskRepository(["x"], lease_s=60.0)  # lease alone would stall 60s
-    tid, _ = repo.get_task("flaky")
-    handle = _FakeHandle()
-    monitor = LivenessMonitor(interval_s=0.05, timeout_s=0.2)
-    monitor.watch(handle, repo.expire_service)
-    try:
-        handle.alive = False  # the node stops answering pings
-        got = repo.get_task("survivor", timeout=5.0)
-        assert got is not None and got[0] == tid
-        assert repo.stats()["reschedules"] == 1
-        assert monitor.deaths == 1
-    finally:
-        monitor.stop()
+    """Heartbeat death feeds the lease machinery — on a virtual clock, so
+    the 'did the monitor beat the lease deadline' race is deterministic
+    instead of a CI-load lottery."""
+    from repro.sim import virtual_time
+
+    with virtual_time() as clock:
+        repo = TaskRepository(["x"], lease_s=60.0, clock=clock)
+        tid, _ = repo.get_task("flaky")
+        handle = _FakeHandle()
+        monitor = LivenessMonitor(interval_s=0.05, timeout_s=0.2, clock=clock)
+        monitor.watch(handle, repo.expire_service)
+        try:
+            handle.alive = False  # the node stops answering pings
+            got = repo.get_task("survivor", timeout=5.0)
+            assert got is not None and got[0] == tid
+            assert repo.stats()["reschedules"] == 1
+            assert monitor.deaths == 1
+            assert clock.monotonic() < 1.0  # way before the 60s lease
+        finally:
+            monitor.stop()
 
 
 # --------------------------------------------------------------------- #
@@ -141,11 +147,9 @@ def test_proc_farm_per_task_and_batched_match_interpret(proc_cluster):
         cm.compute(timeout=120)
         assert [float(v) for v in out] == reference
     # released workers re-register for the next client (Algorithm 2); the
-    # release RPCs may still be in flight when compute() returns, so poll
-    deadline = time.monotonic() + 10.0
-    while len(lookup) < 2 and time.monotonic() < deadline:
-        time.sleep(0.02)
-    assert len(lookup) == 2
+    # release RPCs may still be in flight when compute() returns — wait
+    # event-driven on the lookup itself, no sleep-polling
+    assert lookup.wait_for_services(2, timeout_s=10.0)
 
 
 def test_expiry_then_release_then_duplicate_completion(proc_cluster):
@@ -175,10 +179,11 @@ def _die_mid_batch_scenario(handle_a, handle_b):
                           lease_s=0.2)
     batch_a = repo.get_batch("A", 4, compatible=None)
     assert len(batch_a) == 4
-    # A computes the batch but dies before completing it back
+    # A computes the batch but dies before completing it back.  B's lease
+    # request wakes AT A's lease deadline (repository waits are capped at
+    # the next deadline — event-driven expiry, no sleep here).
     results_a = handle_a.execute_batch(prog, [p for _, p in batch_a])
-    time.sleep(0.3)  # lease expires
-    batch_b = repo.get_batch("B", 4, timeout=2.0)
+    batch_b = repo.get_batch("B", 4, timeout=5.0)
     assert sorted(t for t, _ in batch_b) == sorted(t for t, _ in batch_a)
     assert repo.stats()["reschedules"] == 4
     results_b = handle_b.execute_batch(prog, [p for _, p in batch_b])
@@ -207,13 +212,13 @@ def test_proc_sigkill_mid_run_all_tasks_complete():
         killed = threading.Event()
 
         def killer():
-            # only kill once the victim demonstrably holds/did work
-            while not cm.repository.all_done:
-                if cm.repository.stats()["per_service"].get(victim, 0) >= 1:
-                    pool.kill(0)  # SIGKILL — no goodbye frames
-                    killed.set()
-                    return
-                time.sleep(0.01)
+            # only kill once the victim demonstrably did work — an
+            # event-driven wait on repository completions, not a poll loop
+            if cm.repository.wait_until(
+                    lambda s: s["per_service"].get(victim, 0) >= 1,
+                    timeout=60.0):
+                pool.kill(0)  # SIGKILL — no goodbye frames
+                killed.set()
 
         threading.Thread(target=killer, daemon=True).start()
         cm.compute(timeout=120)
