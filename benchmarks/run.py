@@ -48,11 +48,11 @@ def main() -> None:
 
     from benchmarks import (elasticity, farm_scalability, fault_tolerance,
                             heterogeneous_now, kernels, load_balance,
-                            normal_form)
+                            multi_tenant, normal_form)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
-                elasticity, heterogeneous_now, kernels):
+                elasticity, heterogeneous_now, multi_tenant, kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
 

@@ -1,8 +1,19 @@
-"""Batched-request serving farm with elastic scale-out mid-run.
+"""Multi-tenant serving farm: two weighted jobs time-sharing one pool.
 
-A qwen3-family (reduced) model serves generation requests across JJPF
-services; halfway through, two new services register and the lookup
-observer recruits them automatically (paper §2's asynchronous mechanism).
+The canonical ``repro.farm.FarmScheduler`` demo.  A qwen3-family
+(reduced) model serves generation requests from two independent tenants
+over ONE shared service pool — the paper's shared-Jini-pool scenario,
+arbitrated explicitly instead of first-come-first-served:
+
+- ``interactive`` (weight 2.0) — latency-sensitive traffic, consumed in
+  completion order as results arrive;
+- ``batch`` (weight 1.0) — a background stream fed through
+  ``submit_stream`` under a bounded in-flight window (backpressure, no
+  materialized task list).
+
+Mid-run a third service registers and the scheduler recruits it into the
+pool and rebalances — elastic scale-out now benefits *every* tenant, not
+just whichever client subscribed first.
 
     PYTHONPATH=src python examples/serve_farm.py
 """
@@ -11,35 +22,68 @@ import threading
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as cfgs
 from repro.core import LookupService, Service
+from repro.farm import FarmScheduler
 from repro.models import build
-from repro.runtime.serve_loop import ServeConfig, serve_requests
+from repro.runtime.serve_loop import ServeConfig, make_generate_program
 
 cfg = cfgs.reduced(cfgs.get("qwen3_1p7b"))
 api = build(cfg)
 params = api.init(jax.random.PRNGKey(0))
 
 lookup = LookupService()
-Service(lookup, service_id="seed-node").start()
+for i in range(2):
+    Service(lookup, service_id=f"node-{i}").start()
 
 
 def scale_out():
-    time.sleep(1.0)
-    for i in range(2):
-        Service(lookup, service_id=f"elastic-{i}").start()
-        print(f"[cluster] elastic-{i} joined")
+    time.sleep(0.25)
+    Service(lookup, service_id="elastic-0").start()
+    print("[pool] elastic-0 joined — scheduler rebalances all tenants")
 
 
 threading.Thread(target=scale_out, daemon=True).start()
 
-prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (24, 12))
 sc = ServeConfig(max_new_tokens=6, prompt_len=12, batch_per_task=2)
+program = make_generate_program(api, sc, params)
+rng = np.random.default_rng(0)
+
+
+def requests(n):
+    for i in range(0, n, sc.batch_per_task):
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (sc.batch_per_task, sc.prompt_len))
+        yield {"tokens": jnp.asarray(prompts)}
+
+
 t0 = time.perf_counter()
-gen, stats = serve_requests(api, params, prompts, sc, lookup=lookup,
-                            timeout=600)
-print(f"served {gen.shape[0]} requests x {gen.shape[1]} new tokens "
-      f"in {time.perf_counter()-t0:.1f}s")
-print("per-service:", stats["per_service"])
+with FarmScheduler(lookup, name="serve") as sched:
+    interactive = sched.submit(program, list(requests(16)),
+                               weight=2.0, name="interactive")
+    batch = sched.submit(program, weight=1.0, name="batch")
+    batch.submit_stream(requests(48), window=8)
+
+    served = 0
+    for _tid, out in interactive.as_completed():
+        served += out["generated"].shape[0]
+    print(f"[interactive] {served} requests served "
+          f"in {time.perf_counter() - t0:.1f}s "
+          f"across services {sorted(interactive.stats()['per_service'])}")
+
+    gen = jnp.concatenate([r["generated"] for r in batch.results_in_order()],
+                          axis=0)
+    print(f"[batch] {gen.shape[0]} requests x {gen.shape[1]} new tokens "
+          f"in {time.perf_counter() - t0:.1f}s "
+          f"(peak in-flight {batch.stats()['peak_unfinished']} <= window 8)")
+
+    for job in (interactive, batch):
+        st = job.stats()
+        print(f"[{st['name']}] weight={st['weight']} done={st['done']} "
+              f"service_time={st['service_time_s']:.2f}s "
+              f"per-service={st['per_service']}")
+    print(f"[pool] services={sched.n_services} "
+          f"rebalances={sched.stats()['rebalances']}")

@@ -57,19 +57,35 @@ from .batching import (AdaptiveBatchController, bucket_size,
 from .clock import REAL_CLOCK
 from .discovery import LookupService, ServiceDescriptor
 from .errors import ServiceFailure
-from .normal_form import normal_form_depth, normalize
+from .normal_form import coerce_program
 from .repository import TaskRepository
-from .skeletons import Farm, Program, Seq, Skeleton
+from .skeletons import Program, Skeleton
 from .transport import LivenessMonitor, ServiceHandle, resolve_handle
 
 
 class ControlThread(threading.Thread):
-    """One per recruited service (paper §2)."""
+    """One per recruited service (paper §2).
 
-    def __init__(self, client: "BasicClient", handle: ServiceHandle):
-        super().__init__(daemon=True, name=f"ctl-{handle.service_id}")
+    ``client`` is duck-typed — any *owner* exposing the control surface
+    works: ``clock``, ``program``, ``repository``, ``speculation``,
+    ``max_batch``, ``max_inflight``, ``adaptive_batching``,
+    ``target_batch_latency_s``, ``_stop`` (a ``threading.Event``),
+    ``_thread_finished(thread, crashed=...)`` and ``_record_error(e)``.
+    :class:`BasicClient` is the single-tenant owner; the multi-tenant
+    ``repro.farm.FarmScheduler`` binds the same thread to one
+    (job, service) pair and *revokes* it when the fair-share arbiter
+    reassigns the service: :meth:`revoke` makes the thread stop leasing,
+    drain its in-flight batches, and report back through
+    ``_thread_finished`` — tasks already leased either complete normally
+    or fail back through the ordinary lease machinery, so revocation is
+    safe mid-batch.
+    """
+
+    def __init__(self, client, handle: ServiceHandle, *, name: str | None = None):
+        super().__init__(daemon=True, name=name or f"ctl-{handle.service_id}")
         self.client = client
         self.handle = handle
+        self._revoked = threading.Event()
         self.tasks_done = 0
         self.batches_dispatched = 0
         # heterogeneity-aware lease ceiling: a service advertising itself
@@ -81,6 +97,21 @@ class ControlThread(threading.Thread):
             max_batch=cap,
             initial=cap if not client.adaptive_batching else None,
             target_latency_s=client.target_batch_latency_s)
+
+    def revoke(self) -> None:
+        """Ask the thread to stop pulling work and report back (the
+        fair-share arbiter's reassignment verb).  Takes effect at the next
+        lease boundary: the current task/batch finishes (or fails back)
+        first, in-flight batches are drained, then the thread exits via
+        ``_thread_finished(crashed=False)``."""
+        self.client.clock.event_set(self._revoked)
+
+    @property
+    def revoked(self) -> bool:
+        return self._revoked.is_set()
+
+    def _should_stop(self) -> bool:
+        return self.client._stop.is_set() or self._revoked.is_set()
 
     def run(self) -> None:
         self.client.clock.thread_attach()
@@ -109,7 +140,7 @@ class ControlThread(threading.Thread):
         repo = self.client.repository
         program = self.client.program
         sid = self.handle.service_id
-        while not self.client._stop.is_set():
+        while not self._should_stop():
             got = repo.get_task(sid,
                                 allow_speculation=self.client.speculation)
             if got is None:
@@ -173,7 +204,7 @@ class ControlThread(threading.Thread):
         inflight: deque = deque()
         self._last_drain_end = 0.0
         crashed = False
-        while not self.client._stop.is_set():
+        while not self._should_stop():
             max_batch = (self.controller.next_batch() if adaptive
                          else self.client.max_batch)
             # non-blocking poll while batches are in flight: if nothing is
@@ -264,16 +295,7 @@ class BasicClient:
             issue, in lease order.
         """
         # --- normal-form pre-processing (paper §2) -------------------- #
-        if isinstance(program, Skeleton):
-            nf = normalize(program)
-            self.fused_stages = normal_form_depth(program)
-            program = nf.worker.program
-        elif not isinstance(program, Program):
-            program = Program(program)
-            self.fused_stages = 1
-        else:
-            self.fused_stages = 1
-        self.program = program
+        self.program, self.fused_stages = coerce_program(program)
         self.contract = contract
         self.lookup = lookup if lookup is not None else _default_lookup()
         self.clock = clock if clock is not None else REAL_CLOCK
@@ -370,6 +392,7 @@ class BasicClient:
         """Run the farm to completion; returns (and fills) the output list."""
         if self.elastic:
             self._unsubscribe = self.lookup.subscribe(self._on_new_service)
+        aborted = True  # flipped once every result is in
         try:
             # synchronous recruitment of everything currently registered
             for desc in self.lookup.query():
@@ -397,19 +420,55 @@ class BasicClient:
                 self.repository.wait_all(slice_s)
             if self._errors:
                 raise self._errors[0]
+            aborted = False
         finally:
             self._stop.set()
             self._stop_monitor()
             if self._unsubscribe:
                 self._unsubscribe()
-            with self._threads_lock:
-                handles = list(self._recruited.values())
-            for h in handles:
-                h.release()
-                h.close()
+                self._unsubscribe = None
+            # success: release immediately (compute() returns the moment
+            # the last result is in — trailing speculative duplicates must
+            # not stretch the makespan); abort (timeout/program error):
+            # join first, so a timed-out client never strands capacity
+            self._reap_threads(grace_s=10.0 if aborted else 0.0)
         results = self.repository.results()
         self.output[:] = results
         return self.output
+
+    def _reap_threads(self, grace_s: float = 10.0) -> None:
+        """Hand every service still recruited back to the lookup exactly
+        once, after joining the control threads (clock-aware) for up to
+        ``grace_s``.
+
+        The join is what makes an *aborted* ``compute`` (timeout, program
+        error) safe on a shared pool: without it, a timed-out client
+        returned while its control threads were still leasing tasks from
+        the dead run — and the eager release below raced the threads' own
+        ``_thread_finished`` release, re-registering services that were
+        still executing (another client could recruit a busy node) and
+        double-releasing handles.  Threads notice ``_stop`` at their next
+        lease boundary (bounded by the repository poll timeout); waiting
+        through ``clock.sleep`` keeps the join deterministic under the
+        virtual clock, where a blocking ``Thread.join`` would deadlock the
+        cooperative scheduler."""
+        deadline = self.clock.monotonic() + grace_s
+        with self._threads_lock:
+            threads = list(self._threads)
+        for t in threads:
+            while t.is_alive() and self.clock.monotonic() < deadline:
+                self.clock.sleep(0.02)
+        # threads that exited released their own handle (and popped it);
+        # whatever is left belongs to stragglers still mid-execute past the
+        # grace period — release it here so pool capacity is never stranded
+        # (their _thread_finished finds nothing to release: pop-then-release
+        # keeps it exactly-once).
+        with self._threads_lock:
+            leftover = list(self._recruited.values())
+            self._recruited.clear()
+        for h in leftover:
+            h.release()
+            h.close()
 
     def stats(self) -> dict:
         s = self.repository.stats()

@@ -75,13 +75,15 @@ class LookupService:
         self._clock = clock if clock is not None else REAL_CLOCK
         self._lock = threading.Condition()
         self._services: dict[str, ServiceDescriptor] = {}
-        self._observers: list[Callable[[ServiceDescriptor], None]] = []
+        # (on_register, on_unregister-or-None) pairs
+        self._observers: list[tuple[Callable[[ServiceDescriptor], None],
+                                    Callable[[str], None] | None]] = []
 
     # -- service side ------------------------------------------------ #
     def register(self, descriptor: ServiceDescriptor) -> None:
         with self._lock:
             self._services[descriptor.service_id] = descriptor
-            observers = list(self._observers)
+            observers = [cb for cb, _ in self._observers]
             self._clock.cond_notify_all(self._lock)
         for cb in observers:  # async recruitment path (publish/subscribe)
             try:
@@ -95,8 +97,17 @@ class LookupService:
 
     def unregister(self, service_id: str) -> None:
         with self._lock:
-            self._services.pop(service_id, None)
+            known = self._services.pop(service_id, None) is not None
+            observers = ([uncb for _, uncb in self._observers
+                          if uncb is not None] if known else [])
             self._clock.cond_notify_all(self._lock)
+        for uncb in observers:  # Jini's lease-expiry event, in spirit
+            try:
+                uncb(service_id)
+            except Exception:
+                logger.exception(
+                    "lookup observer %r failed while handling "
+                    "unregistration of %s", uncb, service_id)
 
     def wait_for_services(self, n: int, timeout_s: float = 10.0) -> bool:
         """Block until ≥ ``n`` services are registered (or the timeout
@@ -125,16 +136,24 @@ class LookupService:
             descs = [d for d in descs if predicate(d)]
         return descs
 
-    def subscribe(self, callback: Callable[[ServiceDescriptor], None]) -> Callable:
-        """Asynchronous discovery: ``callback`` fires for every service that
-        registers from now on.  Returns an unsubscribe handle."""
+    def subscribe(self, callback: Callable[[ServiceDescriptor], None],
+                  on_unregister: Callable[[str], None] | None = None
+                  ) -> Callable:
+        """Asynchronous discovery: ``callback`` fires for every service
+        that registers from now on; the optional ``on_unregister`` fires
+        (with the service id) whenever a *known* service leaves the
+        registry — the pool-membership signal a long-lived scheduler needs
+        for services it has not recruited (a recruited service's death is
+        caught by its control thread / heartbeat instead).  Returns an
+        unsubscribe handle covering both."""
+        entry = (callback, on_unregister)
         with self._lock:
-            self._observers.append(callback)
+            self._observers.append(entry)
 
         def unsubscribe():
             with self._lock:
-                if callback in self._observers:
-                    self._observers.remove(callback)
+                if entry in self._observers:
+                    self._observers.remove(entry)
 
         return unsubscribe
 

@@ -94,11 +94,10 @@ class FarmExecutor:
         self._client._stop_monitor()
         if self._client._unsubscribe:
             self._client._unsubscribe()
-        with self._client._threads_lock:
-            handles = list(self._client._recruited.values())
-        for h in handles:
-            h.release()
-            h.close()
+            self._client._unsubscribe = None
+        # join control threads and release still-recruited services exactly
+        # once (same cleanup an aborted BasicClient.compute runs)
+        self._client._reap_threads()
         for fut in stranded:
             fut.cancel()
 

@@ -45,3 +45,15 @@ def normalize(skel: Skeleton) -> Farm:
 def normal_form_depth(skel: Skeleton) -> int:
     """Number of sequential stages fused by normalization (for reporting)."""
     return len(collect_stage_programs(skel))
+
+
+def coerce_program(program) -> tuple[Program, int]:
+    """The farm drivers' shared entry point (paper §2 pre-processing):
+    a skeleton composition collapses to its fused normal-form worker, a
+    bare callable wraps into a ``Program``.  Returns (program, number of
+    fused stages)."""
+    if isinstance(program, Skeleton):
+        return normalize(program).worker.program, normal_form_depth(program)
+    if not isinstance(program, Program):
+        return Program(program), 1
+    return program, 1

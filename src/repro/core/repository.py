@@ -72,7 +72,8 @@ class TaskRepository:
     def __init__(self, tasks: list, *, lease_s: float = 30.0,
                  speculation_factor: float = 3.0, on_complete=None,
                  streaming: bool = False, clock=None, on_lease=None,
-                 straggler_rate_factor: float = 0.5):
+                 straggler_rate_factor: float = 0.5,
+                 reclaim_done: bool = False):
         self._lock = threading.Condition()
         self._clock = clock if clock is not None else REAL_CLOCK
         self.lease_s = lease_s
@@ -85,7 +86,13 @@ class TaskRepository:
         # cheap and never call back into the repository from it.
         self.on_lease = on_lease
         self.streaming = streaming  # open-ended stream (FarmExecutor)
+        # drop payload+result from each record the moment it completes —
+        # for unbounded streams whose results are consumed through
+        # ``on_complete`` (farm jobs), so peak memory is the in-flight
+        # window, not the whole stream.  ``results()`` is meaningless then.
+        self.reclaim_done = reclaim_done
         self._closed = False
+        self._cancelled = False
         self.records = {i: TaskRecord(i, t) for i, t in enumerate(tasks)}
         # deque: every lease pops from the head and every reschedule pushes
         # to the tail — list.pop(0) was O(n) per lease under batched dispatch
@@ -108,9 +115,23 @@ class TaskRepository:
     @property
     def all_done(self) -> bool:
         with self._lock:
+            if self._cancelled:
+                return True
             if self.streaming and not self._closed:
                 return False
             return self._done_count == len(self.records)
+
+    @property
+    def cancelled(self) -> bool:
+        with self._lock:
+            return self._cancelled
+
+    @property
+    def closed(self) -> bool:
+        """True once the stream can no longer grow (non-streaming
+        repositories are born closed)."""
+        with self._lock:
+            return self._closed or not self.streaming
 
     def close(self) -> None:
         """End a streaming repository: no more tasks will be added."""
@@ -118,14 +139,69 @@ class TaskRepository:
             self._closed = True
             self._clock.cond_notify_all(self._lock)
 
+    def cancel(self) -> int:
+        """Terminal, idempotent: drop every pending task, stop handing out
+        work, and make ``all_done`` True so pulling control threads (and
+        anyone in ``wait_all``) unwind.  Tasks already leased keep their
+        records but their results are dropped on arrival (``complete``
+        returns False) and their leases can never re-enqueue — a cancelled
+        repository cannot leak work back into the farm.  Returns how many
+        pending tasks were dropped."""
+        with self._lock:
+            if self._cancelled:
+                return 0
+            self._cancelled = True
+            self._closed = True
+            dropped = len(self._pending)
+            self._pending.clear()
+            self._lease_heap.clear()
+            # clear outstanding leases up front: their results (if any
+            # arrive) are dropped by the guards in complete/fail, and a
+            # cancelled repository must never read as holding leases
+            for rec in self.records.values():
+                if rec.state == TaskState.LEASED:
+                    rec.owners.clear()
+                    rec.state = TaskState.PENDING
+            self._clock.cond_notify_all(self._lock)
+            return dropped
+
     def add_task(self, payload) -> int:
         """Streams can grow while the farm runs."""
         with self._lock:
+            if self._cancelled:
+                raise RuntimeError("cannot add tasks: repository cancelled")
             tid = len(self.records)
             self.records[tid] = TaskRecord(tid, payload)
             self._pending.append(tid)
             self._clock.cond_notify_all(self._lock)
             return tid
+
+    def unfinished(self) -> int:
+        """Tasks added but not yet completed (pending + leased)."""
+        with self._lock:
+            return len(self.records) - self._done_count
+
+    def wait_unfinished_below(self, n: int, *, timeout: float | None = None
+                              ) -> bool:
+        """Block until fewer than ``n`` tasks are unfinished — the
+        backpressure wait for streaming submitters (``Job.submit_stream``):
+        a feeder sleeps here instead of materializing an unbounded task
+        source.  Event-driven (completions notify this condition); returns
+        False on timeout or if the repository is cancelled meanwhile."""
+        deadline = (None if timeout is None
+                    else self._clock.monotonic() + timeout)
+        with self._lock:
+            while len(self.records) - self._done_count >= n:
+                if self._cancelled:
+                    return False
+                remaining = (None if deadline is None
+                             else deadline - self._clock.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._clock.cond_wait(
+                    self._lock, min(remaining, 0.5) if remaining is not None
+                    else 0.5)
+            return not self._cancelled
 
     def _lease_locked(self, rec: TaskRecord, service_id: str,
                       now: float) -> None:
@@ -148,6 +224,8 @@ class TaskRepository:
         deadline = self._clock.monotonic() + timeout
         with self._lock:
             while True:
+                if self._cancelled:
+                    return None
                 self._expire_leases_locked()
                 if (self._done_count == len(self.records)
                         and not (self.streaming and not self._closed)):
@@ -190,6 +268,8 @@ class TaskRepository:
         deadline = self._clock.monotonic() + timeout
         with self._lock:
             while True:
+                if self._cancelled:
+                    return None
                 self._expire_leases_locked()
                 if (self._done_count == len(self.records)
                         and not (self.streaming and not self._closed)):
@@ -311,10 +391,12 @@ class TaskRepository:
         dropped).  Returns True if this call recorded the result."""
         with self._lock:
             rec = self.records[task_id]
-            if rec.state == TaskState.DONE:
+            if rec.state == TaskState.DONE or self._cancelled:
                 return False
             rec.state = TaskState.DONE
-            rec.result = result
+            rec.result = None if self.reclaim_done else result
+            if self.reclaim_done:
+                rec.payload = None
             rec.completed_by = service_id
             self._done_count += 1
             self._durations.append(self._clock.monotonic() - rec.lease_start)
@@ -336,10 +418,12 @@ class TaskRepository:
             now = self._clock.monotonic()
             for task_id, result in results:
                 rec = self.records[task_id]
-                if rec.state == TaskState.DONE:
+                if rec.state == TaskState.DONE or self._cancelled:
                     continue
                 rec.state = TaskState.DONE
-                rec.result = result
+                rec.result = None if self.reclaim_done else result
+                if self.reclaim_done:
+                    rec.payload = None
                 rec.completed_by = service_id
                 self._done_count += 1
                 self._durations.append(now - rec.lease_start)
@@ -359,6 +443,8 @@ class TaskRepository:
         with self._lock:
             rec = self.records[task_id]
             rec.owners.discard(service_id)
+            if self._cancelled:
+                return  # a cancelled stream never re-enqueues work
             if rec.state == TaskState.LEASED and not rec.owners:
                 rec.state = TaskState.PENDING
                 self._pending.append(task_id)
@@ -392,6 +478,8 @@ class TaskRepository:
         number of tasks re-enqueued."""
         expired = 0
         with self._lock:
+            if self._cancelled:
+                return 0
             for rec in self.records.values():
                 if rec.state != TaskState.LEASED or service_id not in rec.owners:
                     continue
@@ -411,6 +499,8 @@ class TaskRepository:
                     else self._clock.monotonic() + timeout)
         with self._lock:
             while self._done_count < len(self.records):
+                if self._cancelled:
+                    return True  # terminal: nothing left to wait for
                 remaining = (None if deadline is None
                              else deadline - self._clock.monotonic())
                 if remaining is not None and remaining <= 0:
@@ -448,6 +538,7 @@ class TaskRepository:
         return {
             "tasks": len(self.records),
             "done": self._done_count,
+            "cancelled": self._cancelled,
             "pending": len(self._pending),
             "leased": leased,
             "reschedules": self.reschedules,

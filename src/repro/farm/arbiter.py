@@ -1,0 +1,114 @@
+"""The weighted fair-share arbiter — pure assignment math.
+
+Given the pool (service → capacity) and the running jobs (weight +
+remaining demand), compute which job each service should serve.  This is
+the arbitration JJPF delegated to "whoever recruits first": the paper's
+shared Jini pool is time-shared by concurrent applications, but nothing
+*divides* it — a client that shows up first takes everything.  The
+arbiter makes the division explicit and fair:
+
+- each job's **target capacity** is ``total_capacity × weight / Σweights``
+  (capacity = 1 / speed_factor, so a 4×-slower node counts for a quarter
+  of a baseline node);
+- a job never holds more services than it has **unfinished tasks**
+  (demand) — surplus flows to jobs that can use it, and a job at its tail
+  sheds services before it finishes;
+- rebalancing is **movement-minimizing**: a service keeps its current job
+  while that job is within target, so a no-op rebalance revokes nothing.
+
+The function is deterministic and side-effect free: services are visited
+in (capacity desc, id) order, jobs tie-break by admission order, and the
+same inputs always produce the same assignment — which is what lets the
+``sim://`` tests pin multi-tenant schedules as exact traces.
+
+Exact fairness holds when integer quotas exist (e.g. 2:1 weights over 6
+equal services).  With non-integer quotas the remainder service sticks
+with one job between events (the arbiter is event-driven, it does not
+time-slice); the scheduler's rebalance-on-every-change keeps long-run
+shares close, and the docs call this out.
+"""
+
+from __future__ import annotations
+
+_EPS = 1e-9
+
+
+def fair_assignment(capacities: dict[str, float],
+                    jobs: list[tuple[str, float, int | None]],
+                    current: dict[str, str] | None = None
+                    ) -> dict[str, str]:
+    """Assign each service to at most one job, fair-share by weight.
+
+    ``capacities``
+        service_id → capacity (1.0 = baseline node, 0.25 = 4× slower).
+    ``jobs``
+        ``(job_id, weight, demand)`` in admission order; ``demand`` caps
+        how many *services* the job can use (its unfinished task count),
+        ``None`` = unbounded (an open stream).
+    ``current``
+        the standing service_id → job_id map; used only to minimize
+        movement (ties and the keep phase prefer the incumbent).
+
+    Returns the desired service_id → job_id map.  Services left out are
+    idle (no job can use them).
+    """
+    current = current or {}
+    jobs = [(j, w, d) for j, w, d in jobs if d is None or d > 0]
+    if not jobs or not capacities:
+        return {}
+    total_cap = sum(capacities.values())
+    total_w = sum(w for _, w, _ in jobs) or 1.0
+    target = {j: total_cap * w / total_w for j, w, _ in jobs}
+    demand = {j: d for j, _, d in jobs}
+    order = {j: i for i, (j, _, _) in enumerate(jobs)}
+    alloc = {j: 0.0 for j, _, _ in jobs}
+    count = {j: 0 for j, _, _ in jobs}
+
+    def room(j: str) -> bool:
+        d = demand[j]
+        return d is None or count[j] < d
+
+    by_cap = sorted(capacities, key=lambda s: (-capacities[s], s))
+    assign: dict[str, str] = {}
+
+    # keep phase: incumbents stay while their job is within target (and
+    # still has demand) — this is what makes a steady-state rebalance a
+    # no-op instead of a pool-wide reshuffle
+    for sid in by_cap:
+        j = current.get(sid)
+        if (j in alloc and room(j)
+                and alloc[j] + capacities[sid] <= target[j] + _EPS):
+            assign[sid] = j
+            alloc[j] += capacities[sid]
+            count[j] += 1
+
+    # pool phase: everything else goes to the most under-served job per
+    # unit weight (largest deficit), incumbents win ties, then admission
+    # order — deterministic, and quota-exact when quotas are integral
+    for sid in by_cap:
+        if sid in assign:
+            continue
+        eligible = [j for j in alloc if room(j)]
+        if not eligible:
+            continue  # every job is demand-capped: the service idles
+        j = min(eligible,
+                key=lambda j: (-(target[j] - alloc[j]),
+                               0 if current.get(sid) == j else 1,
+                               order[j]))
+        assign[sid] = j
+        alloc[j] += capacities[sid]
+        count[j] += 1
+    return assign
+
+
+def jain_index(shares: list[float]) -> float:
+    """Jain's fairness index: 1.0 = perfectly equal, 1/n = one job owns
+    everything.  Used by the multi-tenant benchmark on per-job
+    throughput shares."""
+    if not shares:
+        return 1.0
+    s = sum(shares)
+    sq = sum(x * x for x in shares)
+    if sq <= 0:
+        return 1.0
+    return (s * s) / (len(shares) * sq)

@@ -1,0 +1,454 @@
+"""FarmScheduler: the persistent multi-tenant farm service.
+
+JJPF's value proposition (paper §1, §3) is that many independent
+applications time-share one CoW/NoW with no reconfiguration — but the
+paper's arbitration is first-come-first-served: a ``BasicClient``
+recruits every registered service and keeps it until it exits.  The
+scheduler replaces that with an explicit, persistent arbiter:
+
+- it **owns the pool**: every service that registers with the
+  ``LookupService`` is recruited by the scheduler (and heartbeated if its
+  transport needs it) and stays recruited until the scheduler shuts down,
+  when it is released back to the lookup;
+- applications are **jobs** (:class:`~repro.farm.job.Job`): submit →
+  admission control (at most ``max_concurrent_jobs`` running, FIFO queue
+  beyond that) → weighted fair share of the pool → done/cancelled;
+- the **arbiter** (:func:`~repro.farm.arbiter.fair_assignment`) recomputes
+  the service→job map on every pool or job-set change — submit, finish,
+  cancel, weight change, service join, service death — and applies it by
+  *revoking* control threads (``ControlThread.revoke``): a revoked thread
+  stops leasing at the next batch boundary, drains its in-flight work, and
+  the service is re-dispatched to its new job.  Tasks interrupted by a
+  revocation or death re-enqueue through the ordinary lease machinery, so
+  reassignment is safe mid-batch and loses nothing.
+
+Concurrency contract: one re-entrant scheduler lock guards all maps; it
+is never held across a blocking clock wait, so the whole scheduler runs
+deterministically under a :class:`~repro.sim.VirtualClock` — the
+multi-tenant fairness tests pin exact assignment traces, not statistics.
+The scheduler spawns no thread of its own: rebalances run synchronously
+on whichever thread delivered the event (submitter, control thread,
+lookup observer), which keeps the sim schedule free of hidden pollers.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core.client import ControlThread
+from repro.core.clock import REAL_CLOCK
+from repro.core.discovery import LookupService, ServiceDescriptor
+from repro.core.transport import LivenessMonitor, ServiceHandle, resolve_handle
+
+from .arbiter import fair_assignment
+from .job import Job
+
+_EPS = 1e-9
+
+
+class _Slot:
+    """The ControlThread owner binding one (job, service) pair — the same
+    duck-typed control surface :class:`~repro.core.client.BasicClient`
+    exposes, so the unmodified control-thread loops (per-task, batched
+    AIMD, drain-on-revoke) serve multi-tenant jobs."""
+
+    def __init__(self, scheduler: "FarmScheduler", job: Job,
+                 handle: ServiceHandle):
+        self.scheduler = scheduler
+        self.job = job
+        self.handle = handle
+        self.sid = handle.service_id
+        # -- ControlThread's owner surface ---------------------------- #
+        self.clock = scheduler.clock
+        self.program = job.program
+        self.repository = job.repository
+        self.speculation = job.speculation
+        self.max_batch = job.max_batch
+        self.max_inflight = job.max_inflight
+        self.adaptive_batching = job.adaptive_batching
+        self.target_batch_latency_s = job.target_batch_latency_s
+        self._stop = scheduler._stop
+        self.started_at = scheduler.clock.monotonic()
+
+    def _thread_finished(self, thread: ControlThread, *,
+                         crashed: bool) -> None:
+        self.scheduler._slot_finished(self, thread, crashed=crashed)
+
+    def _record_error(self, e: Exception) -> None:
+        # a program bug fails the job, never the service
+        self.job._record_error(e)
+
+
+class FarmScheduler:
+    """Persistent shared pool + fair-share arbiter + job lifecycle."""
+
+    def __init__(self, lookup: LookupService | None = None, *,
+                 clock=None, max_concurrent_jobs: int = 8,
+                 lease_s: float = 30.0, speculation: bool = True,
+                 max_batch: int = 1, max_inflight: int = 1,
+                 adaptive_batching: bool = True,
+                 target_batch_latency_s: float = 0.05,
+                 on_lease: Callable | None = None,
+                 name: str = "farm"):
+        """``max_batch``/``max_inflight``/... are *defaults* for submitted
+        jobs (overridable per job).  ``on_lease(job_id, task_id,
+        service_id, attempt, t)`` is the cross-job assignment-trace hook
+        (the sim wires it into ``SimCluster.trace``)."""
+        if max_concurrent_jobs < 1:
+            raise ValueError("max_concurrent_jobs must be >= 1")
+        self.lookup = lookup if lookup is not None else LookupService()
+        self.clock = clock if clock is not None else REAL_CLOCK
+        self.name = name
+        self.client_id = f"{name}-scheduler"
+        self.max_concurrent_jobs = max_concurrent_jobs
+        self.defaults = dict(
+            lease_s=lease_s, speculation=speculation, max_batch=max_batch,
+            max_inflight=max_inflight, adaptive_batching=adaptive_batching,
+            target_batch_latency_s=target_batch_latency_s)
+        self.on_lease = on_lease
+
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._started = False
+        self._unsubscribe = None
+        self._monitor: LivenessMonitor | None = None
+        self._handles: dict[str, ServiceHandle] = {}   # the recruited pool
+        self._speed: dict[str, float] = {}
+        self._assignment: dict[str, str] = {}          # sid -> job_id
+        self._threads: dict[str, ControlThread] = {}   # sid -> live thread
+        self._jobs: dict[str, Job] = {}
+        self._running: list[str] = []                  # admission order
+        self._queue: deque[str] = deque()              # FIFO admission queue
+        self._seq = 0
+        self.rebalances = 0
+        self.revocations = 0
+        #: scheduler event trace — with a VirtualClock, THE determinism
+        #: artifact: ("service-join"|"service-dead"|"service-lost"|
+        #: "job-submit"|"job-start"|"assign"|"job-end", t, ...)
+        self.trace: list[tuple] = []
+
+    # ---------------- lifecycle ------------------------------------ #
+    def start(self) -> "FarmScheduler":
+        """Recruit everything currently registered and subscribe for
+        future registrations; idempotent."""
+        with self._lock:
+            if self._started:
+                return self
+            self._started = True
+            self._unsubscribe = self.lookup.subscribe(
+                self._on_register, self._on_unregister)
+            for desc in self.lookup.query():
+                self._add_service_locked(desc)
+        return self
+
+    def __enter__(self) -> "FarmScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def shutdown(self, *, grace_s: float = 10.0) -> None:
+        """Cancel unfinished jobs, stop every control thread (clock-aware
+        join), and release all services back to the lookup — the pool
+        outlives the scheduler.  Idempotent."""
+        with self._lock:
+            self._started = True  # a never-started scheduler just closes
+            self.clock.event_set(self._stop)
+            if self._unsubscribe is not None:
+                self._unsubscribe()
+                self._unsubscribe = None
+            jobs = [j for j in self._jobs.values() if not j.done]
+            monitor, self._monitor = self._monitor, None
+            threads = list(self._threads.values())
+        for job in jobs:
+            job.cancel()
+        if monitor is not None:
+            monitor.stop()
+        # clock-aware join: control threads notice _stop at their next
+        # lease boundary; a raw Thread.join would deadlock a VirtualClock
+        deadline = self.clock.monotonic() + grace_s
+        for t in threads:
+            while t.is_alive() and self.clock.monotonic() < deadline:
+                self.clock.sleep(0.02)
+        with self._lock:
+            handles = list(self._handles.values())
+            self._handles.clear()
+            self._speed.clear()
+            self._assignment.clear()
+            self._threads.clear()
+        for h in handles:
+            try:
+                h.release()
+            except Exception:
+                pass
+            h.close()
+
+    # ---------------- pool membership ------------------------------ #
+    def _on_register(self, desc: ServiceDescriptor) -> None:
+        with self._lock:
+            if self._stop.is_set():
+                return
+            self._add_service_locked(desc)
+
+    def _on_unregister(self, service_id: str) -> None:
+        # only meaningful for services we never managed to recruit (a
+        # rival client got there first, or the node died pre-recruitment)
+        with self._lock:
+            if self._stop.is_set() or service_id in self._handles:
+                return
+            self.trace.append(("service-lost",
+                               round(self.clock.monotonic(), 9), service_id))
+
+    def _add_service_locked(self, desc: ServiceDescriptor) -> bool:
+        sid = desc.service_id
+        if sid in self._handles:
+            return True
+        handle = resolve_handle(desc, lookup=self.lookup)
+        if handle is None:
+            return False
+        # enter the map before recruiting: recruit() unregisters the
+        # service from the lookup, and _on_unregister must see it as ours
+        self._handles[sid] = handle
+        if not handle.recruit(self.client_id):
+            del self._handles[sid]
+            handle.close()
+            return False
+        self._speed[sid] = max(
+            float(handle.capabilities.get("speed_factor") or 1.0), _EPS)
+        self.trace.append(("service-join",
+                           round(self.clock.monotonic(), 9), sid))
+        if handle.needs_heartbeat:
+            if self._monitor is None:
+                self._monitor = LivenessMonitor(clock=self.clock)
+            self._monitor.watch(handle, self._service_dead)
+        self._rebalance_locked()
+        return True
+
+    def _service_dead(self, service_id: str) -> None:
+        """LivenessMonitor verdict: expire the dead node's leases *now*
+        (its job re-leases them elsewhere immediately) and drop it."""
+        with self._lock:
+            thread = self._threads.get(service_id)
+            job = thread.client.job if thread is not None else None
+            self._forget_service_locked(service_id, reason="service-dead")
+            if job is not None:
+                job.repository.expire_service(service_id)
+            if thread is not None:
+                thread.revoke()
+            self._rebalance_locked()
+
+    def _forget_service_locked(self, sid: str, *, reason: str) -> None:
+        handle = self._handles.pop(sid, None)
+        if handle is None:
+            return
+        self._speed.pop(sid, None)
+        self._assignment.pop(sid, None)
+        if self._monitor is not None and handle.needs_heartbeat:
+            self._monitor.unwatch(sid)
+        handle.close()
+        self.trace.append((reason, round(self.clock.monotonic(), 9), sid))
+
+    # ---------------- job lifecycle -------------------------------- #
+    def submit(self, program, tasks: Sequence[Any] | Iterable[Any] | None = None,
+               *, weight: float = 1.0, name: str | None = None,
+               **knobs) -> Job:
+        """Submit a job.  With ``tasks`` the stream is finite and closes
+        immediately (the job finishes when the last task completes);
+        without, it is open — feed it with ``Job.add_task`` /
+        ``Job.submit_stream`` and ``Job.close`` it.  ``knobs`` override
+        the scheduler-wide per-job defaults (``max_batch``, ``lease_s``,
+        ...).  Admission control: beyond ``max_concurrent_jobs`` running
+        jobs, submissions queue FIFO."""
+        merged = dict(self.defaults)
+        merged.update(knobs)
+        # materialize and load the task source OUTSIDE the scheduler lock:
+        # a large (or blocking, or raising) iterable must not stall every
+        # other tenant's rebalance/finish path, and a failure here leaves
+        # no half-registered job behind
+        task_list = list(tasks) if tasks is not None else None
+        with self._lock:
+            self.start()
+            if self._stop.is_set():
+                raise RuntimeError("cannot submit after shutdown")
+            job_id = f"job-{self._seq}"
+            self._seq += 1
+        job = Job(self, job_id, program, weight=weight, name=name,
+                  on_lease=self.on_lease, **merged)
+        if task_list is not None:
+            job.add_tasks(task_list)  # private until admission: no lock
+        with self._lock:
+            if self._stop.is_set():
+                raise RuntimeError("cannot submit after shutdown")
+            self._jobs[job_id] = job
+            self.trace.append(("job-submit",
+                               round(self.clock.monotonic(), 9), job_id,
+                               float(weight)))
+            if len(self._running) < self.max_concurrent_jobs:
+                self._start_job_locked(job)
+                self._rebalance_locked()
+            else:
+                self._queue.append(job_id)
+            if task_list is not None:
+                job.close()  # may finish an empty job on the spot
+        return job
+
+    def _start_job_locked(self, job: Job) -> None:
+        self._running.append(job.job_id)
+        job._mark_running()
+        self.trace.append(("job-start",
+                           round(self.clock.monotonic(), 9), job.job_id))
+
+    def _admit_locked(self) -> None:
+        while self._queue and len(self._running) < self.max_concurrent_jobs:
+            job = self._jobs[self._queue.popleft()]
+            if job.done:  # cancelled while queued
+                continue
+            self._start_job_locked(job)
+
+    def _job_finished(self, job: Job) -> None:
+        """Called on completion (last result recorded) and on cancel —
+        from whatever thread got there first; exactly-once by
+        construction (membership test under the lock)."""
+        with self._lock:
+            if job.job_id in self._queue:  # cancelled while queued
+                self._queue.remove(job.job_id)
+                job._mark_done()  # no-op if cancelled
+                return
+            if job.job_id not in self._running:
+                return
+            self._running.remove(job.job_id)
+            job._mark_done()
+            self.trace.append(("job-end", round(self.clock.monotonic(), 9),
+                               job.job_id, job.state.value))
+            if self._stop.is_set():
+                return
+            self._admit_locked()
+            self._rebalance_locked()
+
+    def _priority_changed(self, job: Job) -> None:
+        with self._lock:
+            if job.job_id in self._running and not self._stop.is_set():
+                self._rebalance_locked()
+
+    def _job_demand_changed(self, job: Job) -> None:
+        """A stream closed: its demand became finite — surplus services
+        (if any) should flow to other jobs without waiting for the job
+        to finish."""
+        with self._lock:
+            if job.job_id in self._running and not self._stop.is_set():
+                self._rebalance_locked()
+
+    # ---------------- the arbiter loop ----------------------------- #
+    def _rebalance_locked(self) -> None:
+        """Recompute the fair-share service→job map and apply the diff:
+        changed services are revoked (their thread exits at the next
+        lease boundary and re-dispatches) or dispatched if idle."""
+        if not self._started or self._stop.is_set():
+            return
+        self.rebalances += 1
+        capacities = {sid: 1.0 / self._speed[sid] for sid in self._handles}
+        jobs = [(jid, self._jobs[jid].weight, self._jobs[jid]._demand())
+                for jid in self._running]
+        desired = fair_assignment(capacities, jobs, self._assignment)
+        now = round(self.clock.monotonic(), 9)
+        for sid in sorted(self._handles):
+            new = desired.get(sid)
+            old = self._assignment.get(sid)
+            if new == old:
+                if new is not None and sid not in self._threads:
+                    self._dispatch_locked(sid)  # idle service, same job
+                continue
+            if new is None:
+                self._assignment.pop(sid, None)
+            else:
+                self._assignment[sid] = new
+            self.trace.append(("assign", now, sid, new))
+            thread = self._threads.get(sid)
+            if thread is not None:
+                self.revocations += 1
+                thread.revoke()  # _slot_finished re-dispatches on exit
+            else:
+                self._dispatch_locked(sid)
+
+    def _dispatch_locked(self, sid: str) -> None:
+        if self._stop.is_set() or sid in self._threads:
+            return
+        jid = self._assignment.get(sid)
+        if jid is None:
+            return  # idle — stays recruited, waiting for the next job
+        job = self._jobs.get(jid)
+        handle = self._handles.get(sid)
+        if job is None or job.done or handle is None:
+            self._assignment.pop(sid, None)
+            return
+        slot = _Slot(self, job, handle)
+        thread = ControlThread(slot, handle, name=f"farm-{sid}-{jid}")
+        self._threads[sid] = thread
+        job._service_attached(sid)
+        self.clock.thread_spawned(thread)
+        thread.start()
+
+    def _slot_finished(self, slot: _Slot, thread: ControlThread, *,
+                       crashed: bool) -> None:
+        """A control thread exited: revoked, job drained, or service
+        failure.  Crash verdicts are double-checked with a ping — a
+        *program* bug also unwinds as `crashed` but must fail the job
+        (done via ``_record_error``), never cost the pool a service."""
+        alive = True
+        if crashed:
+            try:
+                alive = slot.handle.ping()
+            except Exception:
+                alive = False
+        with self._lock:
+            if self._threads.get(slot.sid) is thread:
+                del self._threads[slot.sid]
+            slot.job._service_detached(
+                slot.sid, self.clock.monotonic() - slot.started_at,
+                thread.tasks_done)
+            if not alive:
+                self._forget_service_locked(slot.sid, reason="service-dead")
+                self._rebalance_locked()
+                return
+            if self._stop.is_set():
+                return
+            # re-dispatch per the *current* desired map: a revoked thread
+            # lands on its new job, a finished job's thread goes wherever
+            # the job-end rebalance pointed the service (or idles)
+            self._dispatch_locked(slot.sid)
+
+    # ---------------- introspection -------------------------------- #
+    @property
+    def n_services(self) -> int:
+        with self._lock:
+            return len(self._handles)
+
+    def jobs(self) -> list[Job]:
+        with self._lock:
+            return list(self._jobs.values())
+
+    def assignment(self) -> dict[str, str]:
+        """Current desired service→job map (a copy)."""
+        with self._lock:
+            return dict(self._assignment)
+
+    def services_of(self, job: Job) -> list[str]:
+        with self._lock:
+            return sorted(s for s, j in self._assignment.items()
+                          if j == job.job_id)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "services": {sid: {"speed_factor": self._speed[sid],
+                                   "job": self._assignment.get(sid)}
+                             for sid in sorted(self._handles)},
+                "n_services": len(self._handles),
+                "running": list(self._running),
+                "queued": list(self._queue),
+                "rebalances": self.rebalances,
+                "revocations": self.revocations,
+                "jobs": {jid: j.stats() for jid, j in self._jobs.items()},
+            }

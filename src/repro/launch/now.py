@@ -121,6 +121,18 @@ class NowPool:
                 f"{timeout_s}s (exit code {proc.poll()})")
         return got["port"]
 
+    def scheduler(self, **cfg):
+        """Shared-scheduler mode: a multi-tenant
+        :class:`repro.farm.FarmScheduler` owning this pool of worker
+        processes — many jobs time-share the NoW instead of one
+        BasicClient draining it.  The caller starts/stops it (use it as
+        a context manager)."""
+        from repro.farm import FarmScheduler
+
+        if self.lookup is None:
+            raise RuntimeError("NowPool was built without a lookup")
+        return FarmScheduler(self.lookup, **cfg)
+
     # ------------------------------------------------------------- #
     def kill(self, index: int, sig: int = signal.SIGKILL) -> None:
         """Kill a live worker process — SIGKILL by default, because the

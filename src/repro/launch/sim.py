@@ -70,6 +70,13 @@ class SimPool:
         """A BasicClient wired to this pool's lookup and virtual clock."""
         return self.cluster.make_client(program, tasks, output, **knobs)
 
+    def scheduler(self, **cfg):
+        """Shared-scheduler mode: a multi-tenant
+        :class:`repro.farm.FarmScheduler` owning this pool (lookup +
+        virtual clock pre-wired) — the deterministic twin of
+        ``NowPool.scheduler``."""
+        return self.cluster.make_scheduler(**cfg)
+
     def kill(self, index: int) -> None:
         """Kill a live worker — instant scripted death, the sim analog of
         ``NowPool.kill``'s SIGKILL."""

@@ -322,6 +322,23 @@ class SimCluster:
         out = client.compute(timeout=timeout)
         return out, client
 
+    def _record_job_lease(self, job_id, task_id, service_id, attempt,
+                          t) -> None:
+        # multi-tenant twin of _record_lease: task ids are per-job, so
+        # the trace keys them as "job-N/tid" to stay collision-free
+        self.trace.append((round(t, 9), f"{job_id}/{task_id}",
+                           service_id, attempt))
+
+    def make_scheduler(self, **cfg):
+        """A multi-tenant :class:`repro.farm.FarmScheduler` wired to this
+        cluster (lookup + virtual clock + per-job lease tracing into
+        ``cluster.trace``).  Call ``.start()`` (or submit) to recruit."""
+        from repro.farm import FarmScheduler
+
+        cfg.setdefault("lease_s", 1.0)
+        return FarmScheduler(self.lookup, clock=self.clock,
+                             on_lease=self._record_job_lease, **cfg)
+
     def ideal_makespan(self, n_tasks: int) -> float:
         """Perfect-scheduling lower bound for ``n_tasks`` uniform tasks on
         this mix: total work over aggregate service rate (latency-free)."""

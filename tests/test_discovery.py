@@ -28,6 +28,39 @@ def test_subscribe_observer_fires_on_new_registration():
     assert seen == ["a"]
 
 
+def test_unregister_observer_fires_for_known_services_only():
+    """The pool-membership signal a persistent scheduler subscribes to:
+    on_unregister fires when a *registered* service leaves, never for
+    unknown ids, and unsubscribing silences both callbacks."""
+    lk = LookupService()
+    joined, left = [], []
+    unsub = lk.subscribe(lambda d: joined.append(d.service_id),
+                         on_unregister=left.append)
+    lk.unregister("ghost")  # never registered: no event
+    lk.register(ServiceDescriptor("a", None))
+    lk.register(ServiceDescriptor("b", None))
+    lk.unregister("a")
+    assert joined == ["a", "b"]
+    assert left == ["a"]
+    unsub()
+    lk.unregister("b")
+    assert left == ["a"]
+
+
+def test_unregister_observer_exception_does_not_break_others(caplog):
+    lk = LookupService()
+    left = []
+    lk.subscribe(lambda d: None,
+                 on_unregister=lambda sid: (_ for _ in ()).throw(
+                     RuntimeError("observer bug")))
+    lk.subscribe(lambda d: None, on_unregister=left.append)
+    lk.register(ServiceDescriptor("a", None))
+    with caplog.at_level(logging.ERROR):
+        lk.unregister("a")
+    assert left == ["a"]
+    assert any("unregistration" in r.message for r in caplog.records)
+
+
 def test_service_recruit_unregisters_and_release_reregisters():
     lk = LookupService()
     svc = Service(lk)

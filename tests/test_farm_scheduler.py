@@ -1,0 +1,467 @@
+"""Multi-tenant FarmScheduler invariants over the ``sim://`` backend.
+
+Fairness, rebalance, and cancellation claims are *timing* claims, so —
+like tests/test_sim_scheduling.py — everything here runs the real farm
+stack (scheduler, arbiter, revocable control threads, per-job
+repositories) under a seeded VirtualClock: same seed ⇒ identical
+schedule, and the fairness assertions are exact invariants rather than
+statistics.  CI adds extra seeds through ``JJPF_SIM_SEEDS``.
+"""
+
+import os
+import threading
+
+import pytest
+
+from repro.core import Farm, Program, Seq, interpret
+from repro.farm import JobCancelled, JobState, fair_assignment, jain_index
+from repro.sim import SimCluster
+
+SEEDS = ([int(s) for s in os.environ.get("JJPF_SIM_SEEDS", "").split(",")
+          if s] or [1, 2, 3])
+
+# host-side program: multi-tenancy is about arbitration, not XLA
+PROG = Program(lambda x: x * 2.0 + 1.0, name="affine", jit=False)
+
+
+def _ref(n):
+    return [float(v) for v in
+            interpret(Farm(Seq(PROG)), [float(i) for i in range(n)])]
+
+
+def _tasks(n):
+    return [float(i) for i in range(n)]
+
+
+def _settle(cluster, s: float = 2.0):
+    """Let revoked/finished control threads run out their last virtual
+    waits so attachment sets and thread maps quiesce before asserting."""
+    cluster.clock.sleep(s)
+
+
+# ------------------------------------------------------------------ #
+# the arbiter as pure math
+# ------------------------------------------------------------------ #
+def test_arbiter_equal_weights_split_capacity():
+    caps = {f"s{i}": 1.0 for i in range(4)}
+    got = fair_assignment(caps, [("a", 1.0, None), ("b", 1.0, None)], {})
+    assert sorted(got.values()) == ["a", "a", "b", "b"]
+
+
+def test_arbiter_weighted_split_and_determinism():
+    caps = {f"s{i}": 1.0 for i in range(6)}
+    jobs = [("a", 2.0, None), ("b", 1.0, None)]
+    got = fair_assignment(caps, jobs, {})
+    assert sum(1 for j in got.values() if j == "a") == 4
+    assert sum(1 for j in got.values() if j == "b") == 2
+    assert got == fair_assignment(caps, jobs, {})
+
+
+def test_arbiter_keeps_incumbents_when_within_target():
+    caps = {f"s{i}": 1.0 for i in range(4)}
+    current = {"s0": "a", "s1": "a", "s2": "b", "s3": "b"}
+    got = fair_assignment(caps, [("a", 1.0, None), ("b", 1.0, None)], current)
+    assert got == current  # steady state: a rebalance moves nothing
+
+
+def test_arbiter_demand_caps_release_surplus():
+    caps = {f"s{i}": 1.0 for i in range(4)}
+    # job a only has one unfinished task left: it can use one service
+    got = fair_assignment(caps, [("a", 1.0, 1), ("b", 1.0, None)], {})
+    assert sum(1 for j in got.values() if j == "a") == 1
+    assert sum(1 for j in got.values() if j == "b") == 3
+    # every job capped: the extra services idle
+    got = fair_assignment(caps, [("a", 1.0, 1), ("b", 1.0, 1)], {})
+    assert len(got) == 2
+
+
+def test_arbiter_capacity_weighs_speed_factors():
+    # 2 baseline + one 2x-slower + one 4x-slower node, equal weights:
+    # shares are balanced by capacity, not by node count
+    caps = {"s0": 1.0, "s1": 1.0, "s2": 0.5, "s3": 0.25}
+    got = fair_assignment(caps, [("a", 1.0, None), ("b", 1.0, None)], {})
+    share_a = sum(caps[s] for s, j in got.items() if j == "a")
+    share_b = sum(caps[s] for s, j in got.items() if j == "b")
+    assert abs(share_a - share_b) <= 0.5  # within one slow node
+
+
+def test_jain_index():
+    assert jain_index([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+
+
+# ------------------------------------------------------------------ #
+# determinism
+# ------------------------------------------------------------------ #
+def _two_job_scenario(seed):
+    """Two concurrent jobs + a third submitted mid-run + a cancellation:
+    the full multi-tenant event repertoire in one deterministic run."""
+    with SimCluster(speed_factors=[1, 1, 2, 4], seed=seed,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=4, max_inflight=2)
+        with sched:
+            a = sched.submit(PROG, _tasks(120), weight=2.0)
+            b = sched.submit(PROG, _tasks(120), weight=1.0)
+            # wait (in virtual time) for mid-run, then submit a third job
+            a.repository.wait_until(lambda s: s["done"] >= 40, timeout=600)
+            c = sched.submit(PROG, _tasks(60))
+            victim = sched.submit(PROG, name="victim")
+            victim.submit_stream((float(i) for i in range(10_000)),
+                                 window=16)
+            victim.repository.wait_until(lambda s: s["done"] >= 8,
+                                         timeout=600)
+            victim.cancel()
+            outs = {}
+            for name, job in (("a", a), ("b", b), ("c", c)):
+                job.wait(timeout=600)
+                outs[name] = [float(v) for v in job.results_in_order()]
+            _settle(cluster)
+            return (outs, list(sched.trace), list(cluster.trace),
+                    cluster.clock.monotonic())
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_same_seed_identical_multitenant_trace(seed):
+    r1 = _two_job_scenario(seed)
+    r2 = _two_job_scenario(seed)
+    assert r1[0] == r2[0]  # every job's outputs
+    assert r1[1] == r2[1]  # scheduler event trace (assign/submit/end)
+    assert r1[2] == r2[2]  # cross-job lease trace, timestamps included
+    assert r1[3] == r2[3]  # virtual makespan, bit for bit
+    assert r1[0]["a"] == _ref(120)
+    assert r1[0]["b"] == _ref(120)
+    assert r1[0]["c"] == _ref(60)
+
+
+# ------------------------------------------------------------------ #
+# fairness
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", SEEDS)
+def test_equal_weight_jobs_get_equal_throughput_share(seed):
+    n = 300
+    with SimCluster(speed_factors=[1, 1, 1, 1], seed=seed,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=2)
+        with sched:
+            a = sched.submit(PROG, _tasks(n))
+            b = sched.submit(PROG, _tasks(n))
+            a.wait(timeout=600)
+            b.wait(timeout=600)
+            makespan = cluster.clock.monotonic()
+            total_rate = 2 * n / makespan
+            shares = []
+            for job in (a, b):
+                span = job.finished_at - job.started_at
+                shares.append((n / span) / total_rate)
+            # each equal-weight job gets >= 0.45 of the pool's throughput
+            assert min(shares) >= 0.45, shares
+            # and they finish within 10% of each other
+            ends = sorted(j.finished_at for j in (a, b))
+            assert (ends[1] - ends[0]) / ends[1] <= 0.10
+            _settle(cluster)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_two_to_one_weights_give_two_to_one_service_share(seed):
+    n = 300
+    with SimCluster(speed_factors=[1] * 6, seed=seed,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=2)
+        with sched:
+            heavy = sched.submit(PROG, _tasks(n), weight=2.0)
+            light = sched.submit(PROG, _tasks(n), weight=1.0)
+            # 6 services split 4:2 — exact integer quotas for 2:1 weights
+            assert len(sched.services_of(heavy)) == 4
+            assert len(sched.services_of(light)) == 2
+            heavy.wait(timeout=600)
+            light_done = light.stats()["done"]
+            # while both ran, completion rates tracked the 2:1 weights
+            ratio = n / max(light_done, 1)
+            assert 1.7 <= ratio <= 2.4, ratio
+            light.wait(timeout=600)
+            assert light.stats()["done"] == n
+            _settle(cluster)
+
+
+def test_set_weight_triggers_rebalance():
+    with SimCluster(speed_factors=[1] * 4, seed=5) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            a = sched.submit(PROG, _tasks(400))
+            b = sched.submit(PROG, _tasks(400))
+            assert len(sched.services_of(a)) == 2
+            before = sched.rebalances
+            a.set_weight(3.0)  # 3:1 over 4 services -> 3:1 split
+            assert sched.rebalances > before
+            assert len(sched.services_of(a)) == 3
+            assert len(sched.services_of(b)) == 1
+            a.wait(timeout=600)
+            b.wait(timeout=600)
+            _settle(cluster)
+
+
+# ------------------------------------------------------------------ #
+# rebalance on job-set changes
+# ------------------------------------------------------------------ #
+def test_mid_run_submit_rebalances_and_finisher_is_reabsorbed():
+    with SimCluster(speed_factors=[1] * 4, seed=9,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=2)
+        with sched:
+            a = sched.submit(PROG, _tasks(120))
+            assert len(sched.services_of(a)) == 4  # sole tenant: whole pool
+            a.repository.wait_until(lambda s: s["done"] >= 30, timeout=600)
+            b = sched.submit(PROG, _tasks(600))
+            # the submission rebalanced half the pool away mid-run
+            assert len(sched.services_of(a)) == 2
+            assert len(sched.services_of(b)) == 2
+            assert any(ev[0] == "assign" and ev[3] == b.job_id
+                       for ev in sched.trace)
+            a.wait(timeout=600)
+            # the finisher's services were re-absorbed by the survivor
+            assert len(sched.services_of(b)) == 4
+            b.wait(timeout=600)
+            assert [float(v) for v in a.results_in_order()] == _ref(120)
+            assert [float(v) for v in b.results_in_order()] == _ref(600)
+            _settle(cluster)
+
+
+def test_revocation_mid_batch_loses_and_duplicates_nothing():
+    """A rebalance that revokes mid-stream must neither drop nor re-run
+    tasks: with speculation off, per-service completions sum exactly."""
+    n = 240
+    with SimCluster(speed_factors=[1] * 4, seed=13,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=8, max_inflight=2,
+                                       speculation=False)
+        with sched:
+            a = sched.submit(PROG, _tasks(n))
+            a.repository.wait_until(lambda s: s["done"] >= 40, timeout=600)
+            b = sched.submit(PROG, _tasks(n))  # forces mid-batch revocation
+            a.wait(timeout=600)
+            b.wait(timeout=600)
+            assert sched.revocations > 0
+            for job in (a, b):
+                st = job.stats()
+                assert st["done"] == n
+                assert sum(st["per_service"].values()) == n  # exactly once
+            assert [float(v) for v in a.results_in_order()] == _ref(n)
+            _settle(cluster)
+
+
+# ------------------------------------------------------------------ #
+# streaming submission
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("ordered", [True, False])
+def test_submit_stream_10k_bounded_window_matches_interpret(ordered):
+    """The acceptance bar: a 10k-task generator completes under a bounded
+    in-flight window and matches the sequential interpret() reference."""
+    n, window = 10_000, 256
+    with SimCluster(speed_factors=[1] * 4, seed=11,
+                    base_cost_s=0.0005) as cluster:
+        sched = cluster.make_scheduler(max_batch=16, max_inflight=2)
+        with sched:
+            job = sched.submit(PROG, name="stream")
+            job.submit_stream((float(i) for i in range(n)), window=window)
+            if ordered:
+                got = [float(v) for v in job.results_in_order()]
+            else:
+                pairs = list(job.as_completed())
+                got = [float(v) for _, v in sorted(pairs)]
+            reference = [float(v) for v in
+                         interpret(Farm(Seq(PROG)),
+                                   [float(i) for i in range(n)])]
+            assert got == reference
+            # peak in-flight memory is the window, not the stream
+            assert job.stats()["peak_unfinished"] <= window
+            assert job.state is JobState.DONE
+            _settle(cluster)
+
+
+def test_stream_backpressure_blocks_feeder():
+    """With a tiny window the feeder must stay within window of the
+    consumer at every instant (not just at the end)."""
+    with SimCluster(speed_factors=[1, 1], seed=3) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            job = sched.submit(PROG)
+            job.submit_stream((float(i) for i in range(500)), window=4)
+            for _ in job.as_completed():
+                assert job.repository.unfinished() <= 4
+            assert job.stats()["peak_unfinished"] <= 4
+            _settle(cluster)
+
+
+def test_one_consumer_per_job():
+    with SimCluster(speed_factors=[1], seed=1) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            job = sched.submit(PROG, _tasks(4))
+            it = job.as_completed()
+            next(it)
+            with pytest.raises(RuntimeError, match="one consumer"):
+                next(job.results_in_order())
+            job.wait(timeout=600)
+            _settle(cluster)
+
+
+# ------------------------------------------------------------------ #
+# cancellation
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", SEEDS)
+def test_cancel_mid_stream_leaks_nothing(seed):
+    with SimCluster(speed_factors=[1] * 4, seed=seed,
+                    latency_jitter_s=0.0001) as cluster:
+        sched = cluster.make_scheduler(max_batch=8, max_inflight=2)
+        with sched:
+            victim = sched.submit(PROG, name="victim")
+            victim.submit_stream((float(i) for i in range(10**9)),
+                                 window=32)
+            survivor = sched.submit(PROG, _tasks(200))
+            seen = 0
+            with pytest.raises(JobCancelled):
+                for _tid, _r in victim.as_completed():
+                    seen += 1
+                    if seen == 50:
+                        assert victim.cancel()
+                        assert not victim.cancel()  # exactly once
+            assert seen == 50
+            survivor.wait(timeout=600)
+            _settle(cluster)
+            # no leaked leases, pending tasks, services, or threads
+            vs = victim.stats()
+            assert vs["state"] == "cancelled"
+            assert vs["pending"] == 0 and vs["leased"] == 0
+            assert vs["services"] == []
+            assert victim.job_id not in sched.assignment().values()
+            assert not sched._threads
+            leaked = [t.name for t in threading.enumerate()
+                      if t.name.startswith(("farm-", "job-"))]
+            assert not leaked, leaked
+            # the survivor got the whole pool and a correct answer
+            assert survivor.stats()["done"] == 200
+            assert [float(v) for v in survivor.results_in_order()] == _ref(200)
+
+
+def test_cancel_queued_job_never_runs():
+    with SimCluster(speed_factors=[1, 1], seed=2) as cluster:
+        sched = cluster.make_scheduler(max_concurrent_jobs=1)
+        with sched:
+            a = sched.submit(PROG, _tasks(100))
+            b = sched.submit(PROG, _tasks(100))
+            c = sched.submit(PROG, _tasks(50))
+            assert b.state is JobState.QUEUED
+            assert b.cancel()
+            a.wait(timeout=600)
+            c.wait(timeout=600)  # admission skipped the cancelled job
+            assert b.stats()["done"] == 0
+            assert not any(ev[0] == "job-start" and ev[2] == b.job_id
+                           for ev in sched.trace)
+            _settle(cluster)
+
+
+def test_program_error_fails_job_not_pool():
+    def boom(x):
+        raise ValueError("program bug")
+
+    with SimCluster(speed_factors=[1, 1], seed=4) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            bad = sched.submit(Program(boom, name="boom", jit=False),
+                               _tasks(10))
+            with pytest.raises(ValueError, match="program bug"):
+                bad.wait(timeout=600)
+            assert bad.state is JobState.CANCELLED
+            # the pool survived the buggy job: both services still serve
+            good = sched.submit(PROG, _tasks(60))
+            good.wait(timeout=600)
+            assert sched.n_services == 2
+            assert [float(v) for v in good.results_in_order()] == _ref(60)
+            _settle(cluster)
+
+
+# ------------------------------------------------------------------ #
+# admission control + lifecycle
+# ------------------------------------------------------------------ #
+def test_admission_fifo_and_states():
+    with SimCluster(speed_factors=[1, 1], seed=6) as cluster:
+        sched = cluster.make_scheduler(max_concurrent_jobs=2)
+        with sched:
+            jobs = [sched.submit(PROG, _tasks(60)) for _ in range(4)]
+            assert [j.state for j in jobs[:2]] == [JobState.RUNNING] * 2
+            assert [j.state for j in jobs[2:]] == [JobState.QUEUED] * 2
+            for j in jobs:
+                j.wait(timeout=600)
+            starts = [ev[2] for ev in sched.trace if ev[0] == "job-start"]
+            assert starts == [j.job_id for j in jobs]  # FIFO admission
+            _settle(cluster)
+
+
+def test_empty_job_finishes_immediately():
+    with SimCluster(speed_factors=[1], seed=1) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            job = sched.submit(PROG, [])
+            assert job.wait(timeout=10) is JobState.DONE
+            _settle(cluster)
+
+
+def test_submit_after_shutdown_raises():
+    with SimCluster(speed_factors=[1], seed=1) as cluster:
+        sched = cluster.make_scheduler()
+        sched.start()
+        sched.shutdown()
+        with pytest.raises(RuntimeError, match="shutdown"):
+            sched.submit(PROG, _tasks(2))
+        # shutdown released the pool back to the lookup
+        assert cluster.lookup.wait_for_services(1, timeout_s=5.0)
+
+
+def test_shutdown_releases_pool_for_basic_clients():
+    """The pool outlives the scheduler: a plain BasicClient can recruit
+    the released services afterwards."""
+    with SimCluster(speed_factors=[1, 1], seed=8) as cluster:
+        sched = cluster.make_scheduler()
+        with sched:
+            job = sched.submit(PROG, _tasks(40))
+            job.wait(timeout=600)
+            _settle(cluster)
+        assert cluster.lookup.wait_for_services(2, timeout_s=5.0)
+        out, _ = cluster.run(PROG, _tasks(20))
+        assert [float(v) for v in out] == _ref(20)
+
+
+def test_late_service_joins_pool_and_is_assigned():
+    from repro.sim import FaultSpec
+
+    with SimCluster(speed_factors=[1, 1, 1], seed=10,
+                    faults={2: FaultSpec(register_at=0.02)}) as cluster:
+        sched = cluster.make_scheduler(max_batch=2)
+        with sched:
+            job = sched.submit(PROG, _tasks(400))
+            assert sched.n_services == 2  # sim2 not registered yet
+            job.repository.wait_until(
+                lambda s: len(s["per_service"]) >= 3, timeout=600)
+            assert sched.n_services == 3  # recruited the late joiner
+            job.wait(timeout=600)
+            assert job.stats()["per_service"].get("sim2", 0) > 0
+            _settle(cluster)
+
+
+# ------------------------------------------------------------------ #
+# satellite: a timed-out BasicClient must not strand pool capacity
+# ------------------------------------------------------------------ #
+def test_compute_timeout_releases_services_and_joins_threads():
+    with SimCluster(speed_factors=[1] * 3, seed=1,
+                    base_cost_s=0.05) as cluster:
+        # ~200 x 0.05 / 3 = 3.3 virtual seconds of work, 0.5s budget
+        client = cluster.make_client(PROG, _tasks(200))
+        with pytest.raises(TimeoutError):
+            client.compute(timeout=0.5)
+        # every control thread joined, every service back in the lookup
+        assert not any(t.is_alive() for t in client._threads)
+        assert not client._recruited
+        assert cluster.lookup.wait_for_services(3, timeout_s=5.0)
+        # the capacity is immediately reusable
+        out, c2 = cluster.run(PROG, _tasks(30), max_batch=4)
+        assert [float(v) for v in out] == _ref(30)
