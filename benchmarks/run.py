@@ -29,11 +29,25 @@ def compare_batched(args) -> None:
         print(f"{name},{us:.1f},{derived}")
 
 
+def run_engine_overhead(args) -> None:
+    """The engine-unification gate: the single-tenant adapters vs the
+    raw one-job FarmScheduler path; writes ``BENCH_engine.json`` and
+    fails if BasicClient's overhead exceeds the floor."""
+    from benchmarks import engine_overhead as mod
+
+    mod.main(["--out", args.engine_out])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--compare-batched", action="store_true",
                     help="only run the batched-vs-per-task dispatch "
                          "comparison (farm_scalability --batched)")
+    ap.add_argument("--engine-overhead", action="store_true",
+                    help="only run the unified-engine adapter-overhead "
+                         "gate (BasicClient/FarmExecutor vs raw "
+                         "FarmScheduler; writes BENCH_engine.json)")
+    ap.add_argument("--engine-out", default="BENCH_engine.json")
     ap.add_argument("--services", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=2)
@@ -45,14 +59,18 @@ def main() -> None:
     if args.compare_batched:
         compare_batched(args)
         return
+    if args.engine_overhead:
+        run_engine_overhead(args)
+        return
 
-    from benchmarks import (elasticity, farm_scalability, fault_tolerance,
-                            heterogeneous_now, kernels, load_balance,
-                            multi_tenant, normal_form)
+    from benchmarks import (elasticity, engine_overhead, farm_scalability,
+                            fault_tolerance, heterogeneous_now, kernels,
+                            load_balance, multi_tenant, normal_form)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
-                elasticity, heterogeneous_now, multi_tenant, kernels):
+                elasticity, heterogeneous_now, multi_tenant, engine_overhead,
+                kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
 

@@ -1,4 +1,5 @@
-"""Quickstart: the paper's two-line API on a local 'cluster'.
+"""Quickstart: the paper's two-line API on a local 'cluster' — and the
+three front-ends of the one dispatch engine behind it.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --transport=proc
@@ -7,14 +8,19 @@
 process; ``--transport=proc`` spawns one OS worker process per service
 (the NoW deployment) — same client code, same two lines, the endpoint
 addresses in the lookup are just ``proc://`` instead of ``inproc://``.
+
+Every idiom below (blocking ``BasicClient``, futures ``FarmExecutor``,
+shared multi-tenant ``FarmScheduler``) is an adapter over the same
+``repro.farm`` scheduler core, so all of them run on either transport.
 """
 
 import argparse
 
 import jax.numpy as jnp
 
-from repro.core import (BasicClient, Farm, LookupService, Pipe, Program, Seq,
-                        Service)
+from repro.core import (BasicClient, Farm, FarmExecutor, LookupService, Pipe,
+                        Program, Seq, Service)
+from repro.farm import FarmScheduler
 
 ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--transport", choices=("inproc", "proc"), default="inproc")
@@ -64,6 +70,24 @@ cm3 = BasicClient(program, None, tasks, out3, lookup=lookup,
 cm3.compute()
 print("batched :", [float(v) for v in out3])
 print("batching:", cm3.stats()["batching"])
+
+# --- front-end 2: futures (FarmExecutor over the same engine) --------------
+# submit() returns a concurrent.futures.Future immediately; map() registers
+# the whole batch under one repository lock acquisition
+with FarmExecutor(program, lookup=lookup, max_batch=4) as ex:
+    futs = ex.map(tasks)
+    print("futures :", [float(f.result(timeout=120)) for f in futs])
+
+# --- front-end 3: the shared multi-tenant scheduler ------------------------
+# two weighted jobs time-share the same pool; the engine arbitrates by
+# weighted fair share and revokes control threads to rebalance
+with FarmScheduler(lookup, max_batch=4) as sched:
+    heavy = sched.submit(program, tasks, weight=2.0)
+    light = sched.submit(Program(lambda x: x + 1, name="inc"), tasks)
+    heavy.wait(timeout=120)
+    light.wait(timeout=120)
+    print("tenants :", [float(v) for v in heavy.results_in_order()][:4], "...",
+          [float(v) for v in light.results_in_order()][:4], "...")
 
 if pool is not None:
     pool.shutdown()

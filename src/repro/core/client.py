@@ -1,4 +1,4 @@
-"""BasicClient — the paper's two-line API, and its control threads.
+"""BasicClient — the paper's two-line API, as a one-job engine adapter.
 
     cm = BasicClient(program, None, input_tasks, output)
     cm.compute()
@@ -11,257 +11,48 @@ Paper Algorithm 1:
     7    wait the end of computation;
     9 terminate
 
-Each control thread serves one recruited service: it pulls tasks from the
-centralized ``TaskRepository`` (pull scheduling = automatic load balancing),
-pushes them to the service, stores results, and — on a service failure —
-reports the task back for rescheduling and exits.  An asynchronous lookup
-observer recruits services that appear *during* the computation.
+Since the engine unification this class carries **no dispatch machinery
+of its own**: it is "a scheduler with exactly one job".  Construction
+builds a private single-tenant :class:`repro.farm.FarmScheduler` (the
+one dispatch core in the repo) and registers one finite
+:class:`repro.farm.Job` holding ``input_tasks``; :meth:`compute` starts
+the engine (recruitment through the scheduler's
+:class:`~repro.core.pool.ServicePool` — synchronous sweep plus, when
+``elastic``, the subscribe path), waits the job out, and tears the
+engine down.  The control threads, batching/AIMD hot path, speculation,
+heterogeneity-aware lease caps, lease expiry, and liveness monitoring
+are all the engine's — identical to what a multi-tenant
+``FarmScheduler`` or a ``FarmExecutor`` runs, on ``inproc://``,
+``proc://``, and ``sim://`` alike.
 
-Beyond the paper: the batched/asynchronous hot path.  With ``max_batch > 1``
-a control thread leases up to N shape-compatible tasks per round-trip
-(``TaskRepository.get_batch``) and runs them as ONE vmap-compiled call
-(``ServiceHandle.execute_batch``); with ``max_inflight > 1`` it keeps
-several batches un-materialized on the device, so device compute overlaps
-host scheduling, and only ``block_until_ready``-s the oldest batch when the
-window is full.  An :class:`~repro.core.batching.AdaptiveBatchController`
-per service grows/shrinks the lease size from observed batch latency, which
-keeps slow services (large ``speed_factor``) on small leases — sharp load
-balancing on heterogeneous clusters.
+Teardown keeps the two historical contracts:
 
-Control threads are transport-agnostic: they talk to a
-:class:`~repro.core.transport.base.ServiceHandle` resolved from the
-registered endpoint address, so the per-task and batched/AIMD paths run
-unmodified whether the service is an object in this process
-(``inproc://``), a worker process on the other end of a socket
-(``proc://``), or a simulated workstation on a deterministic virtual
-clock (``sim://``).  Handles whose backend can die silently are
-heartbeated by a :class:`~repro.core.transport.base.LivenessMonitor` that
-expires the dead service's repository leases immediately.
+- **success** releases every service the moment the last result is in
+  (``shutdown(join=False)``) — trailing speculative duplicates must not
+  stretch the makespan;
+- **abort** (timeout, program error) clock-aware-joins the control
+  threads first, then releases exactly once — a timed-out client must
+  never hand a still-busy service back to a shared pool.
 
-Every timestamp and blocking wait goes through ``self.clock``
-(:class:`repro.core.clock.Clock`, wall clock by default) — the seam that
-lets the ``sim://`` backend schedule these exact threads deterministically.
+``ControlThread`` itself now lives in :mod:`repro.core.lease` (re-exported
+here for backward compatibility).
 """
 
 from __future__ import annotations
 
 import threading
-import uuid
-from collections import deque
-from typing import Any, Callable, Sequence
+from typing import Any, Sequence
 
-import jax
-
-from .batching import (AdaptiveBatchController, bucket_size,
-                       payload_signature, speed_capped_max_batch)
 from .clock import REAL_CLOCK
 from .discovery import LookupService, ServiceDescriptor
-from .errors import ServiceFailure
-from .normal_form import coerce_program
-from .repository import TaskRepository
-from .skeletons import Program, Skeleton
-from .transport import LivenessMonitor, ServiceHandle, resolve_handle
-
-
-class ControlThread(threading.Thread):
-    """One per recruited service (paper §2).
-
-    ``client`` is duck-typed — any *owner* exposing the control surface
-    works: ``clock``, ``program``, ``repository``, ``speculation``,
-    ``max_batch``, ``max_inflight``, ``adaptive_batching``,
-    ``target_batch_latency_s``, ``_stop`` (a ``threading.Event``),
-    ``_thread_finished(thread, crashed=...)`` and ``_record_error(e)``.
-    :class:`BasicClient` is the single-tenant owner; the multi-tenant
-    ``repro.farm.FarmScheduler`` binds the same thread to one
-    (job, service) pair and *revokes* it when the fair-share arbiter
-    reassigns the service: :meth:`revoke` makes the thread stop leasing,
-    drain its in-flight batches, and report back through
-    ``_thread_finished`` — tasks already leased either complete normally
-    or fail back through the ordinary lease machinery, so revocation is
-    safe mid-batch.
-    """
-
-    def __init__(self, client, handle: ServiceHandle, *, name: str | None = None):
-        super().__init__(daemon=True, name=name or f"ctl-{handle.service_id}")
-        self.client = client
-        self.handle = handle
-        self._revoked = threading.Event()
-        self.tasks_done = 0
-        self.batches_dispatched = 0
-        # heterogeneity-aware lease ceiling: a service advertising itself
-        # k× slower (descriptor speed_factor) is capped at max_batch/k, so
-        # it can never hoard a full-size lease near the end of a stream
-        speed = float(handle.capabilities.get("speed_factor") or 1.0)
-        cap = speed_capped_max_batch(client.max_batch, speed)
-        self.controller = AdaptiveBatchController(
-            max_batch=cap,
-            initial=cap if not client.adaptive_batching else None,
-            target_latency_s=client.target_batch_latency_s)
-
-    def revoke(self) -> None:
-        """Ask the thread to stop pulling work and report back (the
-        fair-share arbiter's reassignment verb).  Takes effect at the next
-        lease boundary: the current task/batch finishes (or fails back)
-        first, in-flight batches are drained, then the thread exits via
-        ``_thread_finished(crashed=False)``."""
-        self.client.clock.event_set(self._revoked)
-
-    @property
-    def revoked(self) -> bool:
-        return self._revoked.is_set()
-
-    def _should_stop(self) -> bool:
-        return self.client._stop.is_set() or self._revoked.is_set()
-
-    def run(self) -> None:
-        self.client.clock.thread_attach()
-        try:
-            self._run_guarded()
-        finally:
-            self.client.clock.thread_retire()
-
-    def _run_guarded(self) -> None:
-        try:
-            self.handle.prepare(self.client.program)
-        except ServiceFailure:
-            self.client._thread_finished(self, crashed=True)
-            return
-        except Exception as e:
-            self.client._record_error(e)
-            self.client._thread_finished(self, crashed=True)
-            return
-        if self.client.max_batch > 1 or self.client.max_inflight > 1:
-            self._run_batched()
-        else:
-            self._run_per_task()
-
-    # ---------------- per-task path (paper Algorithm 1) --------------- #
-    def _run_per_task(self) -> None:
-        repo = self.client.repository
-        program = self.client.program
-        sid = self.handle.service_id
-        while not self._should_stop():
-            got = repo.get_task(sid,
-                                allow_speculation=self.client.speculation)
-            if got is None:
-                if repo.all_done:
-                    break
-                continue
-            task_id, payload = got
-            try:
-                result = self.handle.execute(program, payload)
-            except ServiceFailure:
-                repo.fail(task_id, sid)
-                self.client._thread_finished(self, crashed=True)
-                return
-            except Exception as e:  # program bug: surface it, don't hang
-                repo.fail(task_id, sid)
-                self.client._record_error(e)
-                self.client._thread_finished(self, crashed=True)
-                return
-            if repo.complete(task_id, result, sid):
-                self.tasks_done += 1
-        self.client._thread_finished(self, crashed=False)
-
-    # ---------------- batched async path ------------------------------ #
-    def _drain_one(self, inflight: deque) -> bool:
-        """Materialize the oldest in-flight batch and record its results.
-        Returns False if materialization failed (async dispatch defers
-        runtime errors to here); the batch is failed back for re-lease."""
-        task_ids, results, t_dispatch = inflight.popleft()
-        try:
-            results = jax.block_until_ready(results)
-        except Exception as e:
-            for tid in task_ids:
-                self.client.repository.fail(tid, self.handle.service_id)
-            if not isinstance(e, ServiceFailure):
-                self.client._record_error(e)
-            return False
-        now = self.client.clock.monotonic()
-        # service time, not residence time: with max_inflight > 1 a batch
-        # queues behind its predecessors, so time-since-dispatch would be
-        # inflated ~max_inflight-fold and collapse the adaptive batch to 1.
-        # The batch's compute effectively starts at the later of its
-        # dispatch and the previous batch's completion.
-        self.controller.record(len(task_ids),
-                               now - max(t_dispatch, self._last_drain_end))
-        self._last_drain_end = now
-        self.tasks_done += self.client.repository.complete_batch(
-            list(zip(task_ids, results)), self.handle.service_id)
-        if self.client.speculation:
-            # observed-throughput feed for straggler detection: a service
-            # whose rate collapses gets its leases speculatively re-issued
-            self.client.repository.report_rate(
-                self.handle.service_id, self.controller.throughput_ewma)
-        return True
-
-    def _run_batched(self) -> None:
-        repo = self.client.repository
-        program = self.client.program
-        sid = self.handle.service_id
-        adaptive = self.client.adaptive_batching
-        # (task_ids, un-materialized results, dispatch time)
-        inflight: deque = deque()
-        self._last_drain_end = 0.0
-        crashed = False
-        while not self._should_stop():
-            max_batch = (self.controller.next_batch() if adaptive
-                         else self.client.max_batch)
-            # non-blocking poll while batches are in flight: if nothing is
-            # leasable right now, drain the oldest batch instead of idling
-            batch = repo.get_batch(sid, max_batch,
-                                   timeout=0.0 if inflight else 0.5,
-                                   allow_speculation=self.client.speculation,
-                                   compatible=payload_signature)
-            if batch is None:
-                if inflight:
-                    if not self._drain_one(inflight):
-                        crashed = True
-                        break
-                    continue
-                if repo.all_done:
-                    break
-                continue
-            task_ids = [tid for tid, _ in batch]
-            payloads = [p for _, p in batch]
-            t0 = self.client.clock.monotonic()
-            try:
-                results = self.handle.execute_batch(
-                    program, payloads, block=False,
-                    pad_to=bucket_size(len(payloads), self.client.max_batch))
-            except ServiceFailure:
-                for tid in task_ids:
-                    repo.fail(tid, sid)
-                crashed = True
-                break
-            except Exception as e:  # program bug: surface it, don't hang
-                for tid in task_ids:
-                    repo.fail(tid, sid)
-                self.client._record_error(e)
-                crashed = True
-                break
-            self.batches_dispatched += 1
-            inflight.append((task_ids, results, t0))
-            while len(inflight) >= self.client.max_inflight:
-                if not self._drain_one(inflight):
-                    crashed = True
-                    break
-            if crashed:
-                break
-        # results already dispatched to the device are valid even if the
-        # service has since died — completing them beats re-running them
-        # (failed drains fail their tasks back for re-lease)
-        while inflight:
-            if not self._drain_one(inflight):
-                crashed = True
-        self.client._thread_finished(self, crashed=crashed)
+from .lease import ControlThread  # noqa: F401  (re-export: old import path)
 
 
 class BasicClient:
-    """The user-facing farm driver."""
+    """The user-facing single-tenant farm driver."""
 
-    def __init__(self, program: Program | Skeleton | Callable,
-                 contract=None, input_tasks: Sequence[Any] | None = None,
+    def __init__(self, program, contract=None,
+                 input_tasks: Sequence[Any] | None = None,
                  output: list | None = None, *, lookup: LookupService | None = None,
                  lease_s: float = 30.0, speculation: bool = True,
                  elastic: bool = True, max_batch: int = 1,
@@ -284,205 +75,107 @@ class BasicClient:
         target_batch_latency_s
             Latency target per batch for the adaptive controller.
         clock
-            Every timestamp and blocking wait in the client, its control
-            threads, the repository, and the liveness monitor goes through
+            Every timestamp and blocking wait in the engine goes through
             this :class:`repro.core.clock.Clock`.  Default: wall clock.
             The ``sim://`` backend passes a deterministic
             :class:`repro.sim.VirtualClock` here.
         on_lease
-            Assignment-trace hook, forwarded to the repository:
-            ``(task_id, service_id, attempt, t)`` per lease/speculative
-            issue, in lease order.
+            Assignment-trace hook: ``(task_id, service_id, attempt, t)``
+            per lease/speculative issue, in lease order.
         """
-        # --- normal-form pre-processing (paper §2) -------------------- #
-        self.program, self.fused_stages = coerce_program(program)
+        from repro.farm import FarmScheduler
+
         self.contract = contract
         self.lookup = lookup if lookup is not None else _default_lookup()
         self.clock = clock if clock is not None else REAL_CLOCK
-        self.client_id = f"client-{uuid.uuid4().hex[:8]}"
-        self.repository = TaskRepository(list(input_tasks or []),
-                                         lease_s=lease_s, clock=self.clock,
-                                         on_lease=on_lease)
         self.output = output if output is not None else []
-        self.speculation = speculation
         self.elastic = elastic
         if max_batch < 1 or max_inflight < 1:
             raise ValueError("max_batch and max_inflight must be >= 1")
+        # kept only for the stats() batched-path gate below; everything
+        # else about dispatch lives in the engine (captured at submit)
         self.max_batch = max_batch
         self.max_inflight = max_inflight
-        self.adaptive_batching = adaptive_batching
-        self.target_batch_latency_s = target_batch_latency_s
 
-        self._stop = threading.Event()
-        self._threads_lock = threading.Lock()
-        self._threads: list[ControlThread] = []
-        self._recruited: dict[str, ServiceHandle] = {}
-        self._errors: list[Exception] = []
-        self._unsubscribe = None
-        self._monitor: LivenessMonitor | None = None
+        engine_on_lease = None
+        if on_lease is not None:  # single tenant: drop the job key
+            engine_on_lease = (lambda jid, tid, sid, att, t:
+                               on_lease(tid, sid, att, t))
+        self.engine = FarmScheduler(
+            self.lookup, clock=self.clock, max_concurrent_jobs=1,
+            lease_s=lease_s, speculation=speculation, max_batch=max_batch,
+            max_inflight=max_inflight, adaptive_batching=adaptive_batching,
+            target_batch_latency_s=target_batch_latency_s,
+            on_lease=engine_on_lease, elastic=elastic, admit=self._admit)
+        # the one job: finite stream, results kept in the repository (the
+        # deliverable is results() in submission order, so no consumer
+        # buffer) — registered now, dispatched when compute() starts the
+        # engine
+        self._job = self.engine.submit(
+            program, list(input_tasks or []), autostart=False,
+            reclaim_done=False, collect_results=False)
+        self.program = self._job.program
+        self.fused_stages = self._job.fused_stages
 
     # ------------------------------------------------------------- #
-    def _recruit(self, desc: ServiceDescriptor) -> bool:
-        handle = resolve_handle(desc, lookup=self.lookup)
-        if handle is None:  # stale registration (endpoint already gone)
-            return False
-        if not handle.recruit(self.client_id):
-            handle.close()
-            return False
-        thread = ControlThread(self, handle)
-        with self._threads_lock:
-            self._recruited[handle.service_id] = handle
-            self._threads.append(thread)
-        if handle.needs_heartbeat:
-            self._watch(handle)
-        # announce before start: a simulated schedule must know the thread
-        # exists before anyone else blocks (no-op on the real clock)
-        self.clock.thread_spawned(thread)
-        thread.start()
-        return True
+    @property
+    def repository(self):
+        """The job's task repository (pull queue + leases)."""
+        return self._job.repository
 
-    def _watch(self, handle: ServiceHandle) -> None:
-        """Heartbeat a handle whose backend can die without a goodbye; on
-        declared death, expire its leases immediately so waiting control
-        threads re-lease the tasks without sitting out ``lease_s``."""
-        with self._threads_lock:
-            if self._monitor is None:
-                self._monitor = LivenessMonitor(clock=self.clock)
-            monitor = self._monitor
-        monitor.watch(handle, self.repository.expire_service)
-
-    def _stop_monitor(self) -> None:
-        with self._threads_lock:
-            monitor, self._monitor = self._monitor, None
-        if monitor is not None:
-            monitor.stop()
-
-    def _on_new_service(self, desc: ServiceDescriptor) -> None:
-        """Asynchronous recruitment (publish/subscribe path)."""
-        if self._stop.is_set() or self.repository.all_done:
-            return
-        if self.contract is not None and not self.contract.wants_more(self):
-            return
-        self._recruit(desc)
-
-    def _thread_finished(self, thread: ControlThread, *, crashed: bool) -> None:
-        sid = thread.handle.service_id
-        with self._threads_lock:
-            handle = self._recruited.pop(sid, None)
-            monitor = self._monitor
-        if monitor is not None and thread.handle.needs_heartbeat:
-            monitor.unwatch(sid)
-        if handle is not None and not crashed:
-            # normal completion: hand the service back to the lookup
-            # (paper Algorithm 2's while-loop: serve one client, re-register)
-            handle.release()
-        if handle is not None:
-            handle.close()
-
-    def _record_error(self, e: Exception) -> None:
-        self._errors.append(e)
+    @property
+    def job(self):
+        """The engine-side :class:`repro.farm.Job` this client adapts."""
+        return self._job
 
     @property
     def n_active_services(self) -> int:
-        with self._threads_lock:
-            return len(self._recruited)
+        return self.engine.n_services
+
+    def _admit(self, desc: ServiceDescriptor) -> bool:
+        """Recruitment gate: the performance contract caps the pool."""
+        return self.contract is None or self.contract.wants_more(self)
+
+    def recruit(self, desc: ServiceDescriptor) -> bool:
+        """Recruit one specific service (subject to the contract) — the
+        :class:`~repro.core.contracts.ApplicationManager` control loop's
+        verb."""
+        return self.engine.recruit(desc)
 
     # ------------------------------------------------------------- #
     def compute(self, *, timeout: float | None = None) -> list:
         """Run the farm to completion; returns (and fills) the output list."""
-        if self.elastic:
-            self._unsubscribe = self.lookup.subscribe(self._on_new_service)
-        aborted = True  # flipped once every result is in
         try:
-            # synchronous recruitment of everything currently registered
-            for desc in self.lookup.query():
-                if self.contract is not None and not self.contract.wants_more(self):
-                    break
-                self._recruit(desc)
-            if self.n_active_services == 0 and len(self.repository):
-                # No services yet: rely on the observer (or fail fast if
-                # inelastic).
-                if not self.elastic:
-                    raise RuntimeError("no services available in lookup")
-
-            deadline = (None if timeout is None
-                        else self.clock.monotonic() + timeout)
-            while not self.repository.all_done:
-                if self._errors:
-                    raise self._errors[0]
-                slice_s = 0.2
-                if deadline is not None:
-                    remaining = deadline - self.clock.monotonic()
-                    if remaining <= 0:
-                        raise TimeoutError(
-                            f"farm did not finish: {self.repository.stats()}")
-                    slice_s = min(slice_s, remaining)
-                self.repository.wait_all(slice_s)
-            if self._errors:
-                raise self._errors[0]
-            aborted = False
-        finally:
-            self._stop.set()
-            self._stop_monitor()
-            if self._unsubscribe:
-                self._unsubscribe()
-                self._unsubscribe = None
-            # success: release immediately (compute() returns the moment
-            # the last result is in — trailing speculative duplicates must
-            # not stretch the makespan); abort (timeout/program error):
-            # join first, so a timed-out client never strands capacity
-            self._reap_threads(grace_s=10.0 if aborted else 0.0)
+            self.engine.start()
+            if (self.engine.n_services == 0 and len(self.repository)
+                    and not self.elastic):
+                # No services and no subscribe path to bring any: fail fast.
+                raise RuntimeError("no services available in lookup")
+            # raises the first program error of a failed job, or
+            # TimeoutError when the budget lapses
+            self._job.wait(timeout=timeout)
+        except BaseException:
+            # abort (timeout/program error): join control threads first,
+            # then release exactly-once, so a timed-out client never
+            # strands (or double-releases) shared pool capacity
+            self.engine.shutdown(grace_s=10.0, join=True)
+            raise
+        # success: release immediately (compute() returns the moment the
+        # last result is in — trailing speculative duplicates must not
+        # stretch the makespan); stragglers find their handle already
+        # popped and release nothing (pop-then-release is exactly-once)
+        self.engine.shutdown(join=False)
         results = self.repository.results()
         self.output[:] = results
         return self.output
 
-    def _reap_threads(self, grace_s: float = 10.0) -> None:
-        """Hand every service still recruited back to the lookup exactly
-        once, after joining the control threads (clock-aware) for up to
-        ``grace_s``.
-
-        The join is what makes an *aborted* ``compute`` (timeout, program
-        error) safe on a shared pool: without it, a timed-out client
-        returned while its control threads were still leasing tasks from
-        the dead run — and the eager release below raced the threads' own
-        ``_thread_finished`` release, re-registering services that were
-        still executing (another client could recruit a busy node) and
-        double-releasing handles.  Threads notice ``_stop`` at their next
-        lease boundary (bounded by the repository poll timeout); waiting
-        through ``clock.sleep`` keeps the join deterministic under the
-        virtual clock, where a blocking ``Thread.join`` would deadlock the
-        cooperative scheduler."""
-        deadline = self.clock.monotonic() + grace_s
-        with self._threads_lock:
-            threads = list(self._threads)
-        for t in threads:
-            while t.is_alive() and self.clock.monotonic() < deadline:
-                self.clock.sleep(0.02)
-        # threads that exited released their own handle (and popped it);
-        # whatever is left belongs to stragglers still mid-execute past the
-        # grace period — release it here so pool capacity is never stranded
-        # (their _thread_finished finds nothing to release: pop-then-release
-        # keeps it exactly-once).
-        with self._threads_lock:
-            leftover = list(self._recruited.values())
-            self._recruited.clear()
-        for h in leftover:
-            h.release()
-            h.close()
-
     def stats(self) -> dict:
         s = self.repository.stats()
         s["fused_stages"] = self.fused_stages
+        engine = self.engine.stats()
         if self.max_batch > 1 or self.max_inflight > 1:
-            with self._threads_lock:
-                threads = list(self._threads)
-            s["batching"] = {
-                t.handle.service_id: {
-                    **t.controller.stats(),
-                    "batches_dispatched": t.batches_dispatched,
-                    "cache_hits": t.handle.cache_hits,
-                    "cache_misses": t.handle.cache_misses,
-                } for t in threads}
+            s["batching"] = engine["batching"]
+        s["engine"] = engine
         return s
 
 

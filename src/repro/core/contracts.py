@@ -45,7 +45,7 @@ class ApplicationManager(threading.Thread):
                     if (contract is not None
                             and not contract.wants_more(self.client)):
                         break
-                    if self.client._recruit(desc):
+                    if self.client.recruit(desc):
                         self.recruit_events += 1
             time.sleep(self.interval_s)
 

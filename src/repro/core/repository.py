@@ -1,4 +1,4 @@
-"""The centralized, synchronized task repository.
+"""The centralized, synchronized task repository — task state only.
 
 The paper: *"Each control thread fetches tasks to be delivered to the remote
 nodes from a centralized, synchronized task repository"* — pull-based
@@ -7,16 +7,19 @@ task on the client until its result arrives is what gives fault tolerance
 ("the task can be rescheduled as soon as the control thread understands that
 the corresponding service node has been disconnected").
 
-Extensions beyond the paper (documented in DESIGN.md):
+Since the engine unification this module is the *task state machine*
+(pending → leased → done, streaming growth, cancellation, results); all
+lease bookkeeping — ownership sets, the deadline heap, expiry, and both
+speculation policies — lives in :class:`repro.core.leases.LeaseTable`,
+which the repository composes and drives under its own lock.  Extensions
+beyond the paper (documented in DESIGN.md):
+
   * lease timeouts — a recruited service that stops heartbeating loses its
     lease and the task is re-enqueued;
   * speculative re-execution of stragglers (MapReduce-style backup tasks):
     ``complete`` is idempotent, first result wins — a task qualifies either
-    by lease *age* (≥ ``speculation_factor`` × median completion time) or
-    because its sole owner is a declared **rate straggler**: control
-    threads feed observed per-service throughput through ``report_rate``,
-    and a service running below ``straggler_rate_factor`` × the median
-    rate has its leases offered to healthy services immediately;
+    by lease *age* or because its sole owner is a declared **rate
+    straggler** (see ``LeaseTable.speculation_candidate``);
   * batched leasing — ``get_batch`` hands a service up to N shape-compatible
     tasks in one round-trip so the client can run them as a single
     vmap-compiled call (see ``repro.core.batching``).
@@ -31,14 +34,14 @@ instant a lease lapses instead of polling it on an unrelated timeout.
 
 from __future__ import annotations
 
-import heapq
 import threading
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import Enum
 from typing import Any
 
 from .clock import REAL_CLOCK
+from .leases import LeaseTable
 
 
 _UNSET = object()
@@ -55,15 +58,11 @@ class TaskRecord:
     task_id: int
     payload: Any
     state: TaskState = TaskState.PENDING
-    owners: set = field(default_factory=set)  # services currently computing it
-    lease_deadline: float = 0.0
-    lease_start: float = 0.0
     result: Any = None
     attempts: int = 0
     completed_by: str | None = None
     group_key: Any = None  # memoized compatibility key (see get_batch)
     group_key_set: bool = False
-    straggler_hit: bool = False  # candidate chosen via the rate-straggler arm
 
 
 class TaskRepository:
@@ -76,16 +75,11 @@ class TaskRepository:
                  reclaim_done: bool = False):
         self._lock = threading.Condition()
         self._clock = clock if clock is not None else REAL_CLOCK
-        self.lease_s = lease_s
-        self.speculation_factor = speculation_factor
-        self.straggler_rate_factor = straggler_rate_factor
+        self.leases = LeaseTable(
+            lease_s=lease_s, speculation_factor=speculation_factor,
+            straggler_rate_factor=straggler_rate_factor, on_lease=on_lease)
         self.on_complete = on_complete  # callable(task_id, result)
-        # assignment-trace hook: callable(task_id, service_id, attempt, t)
-        # fired on every lease and speculative issue.  Called under the
-        # repository lock so the trace order IS the lease order — keep it
-        # cheap and never call back into the repository from it.
-        self.on_lease = on_lease
-        self.streaming = streaming  # open-ended stream (FarmExecutor)
+        self.streaming = streaming  # open-ended stream (futures / jobs)
         # drop payload+result from each record the moment it completes —
         # for unbounded streams whose results are consumed through
         # ``on_complete`` (farm jobs), so peak memory is the in-flight
@@ -97,16 +91,32 @@ class TaskRepository:
         # deque: every lease pops from the head and every reschedule pushes
         # to the tail — list.pop(0) was O(n) per lease under batched dispatch
         self._pending: deque[int] = deque(self.records.keys())
-        # (deadline, task_id) min-heap with lazy deletion: expiry scans only
-        # the actually-expired prefix instead of the full record table
-        self._lease_heap: list[tuple[float, int]] = []
         self._done_count = 0
         self._durations: list[float] = []
-        self._service_rates: dict[str, float] = {}  # observed tasks/second
         self.completions_per_service: dict[str, int] = {}
         self.reschedules = 0
-        self.speculative_issues = 0
-        self.straggler_speculations = 0
+        # high-water mark of unfinished tasks — the streaming-submission
+        # backpressure metric; tracked here (unfinished only grows at
+        # add time, under this lock) so submitters pay no extra lock
+        # round-trip for it
+        self.peak_unfinished = len(self.records)
+
+    # -- lease-policy pass-throughs (API compatibility) ---------------- #
+    @property
+    def lease_s(self) -> float:
+        return self.leases.lease_s
+
+    @property
+    def speculative_issues(self) -> int:
+        return self.leases.speculative_issues
+
+    @property
+    def straggler_speculations(self) -> int:
+        return self.leases.straggler_speculations
+
+    @property
+    def on_lease(self):
+        return self.leases.on_lease
 
     # ------------------------------------------------------------- #
     def __len__(self) -> int:
@@ -154,27 +164,39 @@ class TaskRepository:
             self._closed = True
             dropped = len(self._pending)
             self._pending.clear()
-            self._lease_heap.clear()
             # clear outstanding leases up front: their results (if any
             # arrive) are dropped by the guards in complete/fail, and a
             # cancelled repository must never read as holding leases
+            self.leases.clear()
             for rec in self.records.values():
                 if rec.state == TaskState.LEASED:
-                    rec.owners.clear()
                     rec.state = TaskState.PENDING
             self._clock.cond_notify_all(self._lock)
             return dropped
 
     def add_task(self, payload) -> int:
         """Streams can grow while the farm runs."""
+        return self.add_tasks([payload])[0]
+
+    def add_tasks(self, payloads: list) -> list[int]:
+        """Register a whole batch of tasks under ONE lock acquisition and
+        ONE notify — streaming submitters (``FarmExecutor.map``,
+        ``Job.add_tasks``) were paying a lock round-trip per task."""
         with self._lock:
             if self._cancelled:
                 raise RuntimeError("cannot add tasks: repository cancelled")
-            tid = len(self.records)
-            self.records[tid] = TaskRecord(tid, payload)
-            self._pending.append(tid)
-            self._clock.cond_notify_all(self._lock)
-            return tid
+            tids = []
+            for payload in payloads:
+                tid = len(self.records)
+                self.records[tid] = TaskRecord(tid, payload)
+                self._pending.append(tid)
+                tids.append(tid)
+            unfinished = len(self.records) - self._done_count
+            if unfinished > self.peak_unfinished:
+                self.peak_unfinished = unfinished
+            if tids:
+                self._clock.cond_notify_all(self._lock)
+            return tids
 
     def unfinished(self) -> int:
         """Tasks added but not yet completed (pending + leased)."""
@@ -206,13 +228,8 @@ class TaskRepository:
     def _lease_locked(self, rec: TaskRecord, service_id: str,
                       now: float) -> None:
         rec.state = TaskState.LEASED
-        rec.owners.add(service_id)
-        rec.lease_start = now
-        rec.lease_deadline = now + self.lease_s
         rec.attempts += 1
-        heapq.heappush(self._lease_heap, (rec.lease_deadline, rec.task_id))
-        if self.on_lease is not None:
-            self.on_lease(rec.task_id, service_id, rec.attempts, now)
+        self.leases.lease(rec.task_id, service_id, rec.attempts, now)
 
     # ------------------------------------------------------------- #
     def get_task(self, service_id: str, *, timeout: float = 0.5,
@@ -315,59 +332,22 @@ class TaskRepository:
         expiry is then event-driven (the waiter that wakes at the deadline
         re-enqueues the lapsed lease itself) instead of depending on an
         unrelated notify or the caller's poll timeout."""
-        if self._lease_heap:
-            next_deadline = self._lease_heap[0][0] - self._clock.monotonic()
-            # expired entries were popped at loop top, so next_deadline > 0
-            remaining = min(remaining, max(next_deadline, 1e-6))
+        next_deadline = self.leases.next_deadline()
+        if next_deadline is not None:
+            # expired entries were popped at loop top, so the gap is > 0
+            remaining = min(remaining,
+                            max(next_deadline - self._clock.monotonic(), 1e-6))
         self._clock.cond_wait(self._lock, remaining)
 
-    def _stragglers_locked(self) -> set:
-        """Services whose observed completion rate has fallen below
-        ``straggler_rate_factor`` × the median across reporting services
-        (needs ≥ 2 reporters for a median to mean anything)."""
-        if len(self._service_rates) < 2:
-            return set()
-        rates = sorted(self._service_rates.values())
-        med = rates[len(rates) // 2]
-        cutoff = self.straggler_rate_factor * med
-        return {s for s, r in self._service_rates.items() if r < cutoff}
-
     def _speculation_candidate_locked(self, service_id: str):
-        """A re-executable straggler task: leased for ≥ speculation_factor
-        × the median completion time, OR held solely by a service whose
-        reported throughput marks it a rate straggler.  Never a task this
-        service already owns, never a third copy."""
-        age_ok = len(self._durations) >= 3
-        med = (sorted(self._durations)[len(self._durations) // 2]
-               if age_ok else 0.0)
-        stragglers = self._stragglers_locked()
-        if service_id in stragglers:
-            return None  # a slow node must not duplicate others' work
-        now = self._clock.monotonic()
-        for rec in self.records.values():
-            if (rec.state != TaskState.LEASED
-                    or service_id in rec.owners
-                    or len(rec.owners) >= 2):
-                continue
-            if (age_ok and now - rec.lease_start
-                    > self.speculation_factor * max(med, 1e-3)):
-                return rec.task_id
-            if rec.owners and rec.owners <= stragglers:
-                rec.straggler_hit = True
-                return rec.task_id
-        return None
+        return self.leases.speculation_candidate(
+            service_id, self._durations, self._clock.monotonic())
 
     def _issue_speculative_locked(self, tid: int, service_id: str) -> None:
         rec = self.records[tid]
-        rec.owners.add(service_id)
         rec.attempts += 1
-        self.speculative_issues += 1
-        if rec.straggler_hit:
-            rec.straggler_hit = False
-            self.straggler_speculations += 1
-        if self.on_lease is not None:
-            self.on_lease(tid, service_id, rec.attempts,
-                          self._clock.monotonic())
+        self.leases.issue_speculative(tid, service_id, rec.attempts,
+                                      self._clock.monotonic())
 
     def report_rate(self, service_id: str, tasks_per_s: float | None) -> None:
         """Control threads report observed per-service throughput here
@@ -376,16 +356,28 @@ class TaskRepository:
         if tasks_per_s is None:
             return
         with self._lock:
-            before = self._stragglers_locked()
-            self._service_rates[service_id] = tasks_per_s
             # wake waiters only when the straggler set actually changed
             # (a service just crossed the cutoff, either way) — rates are
             # reported once per drained batch, and an unconditional
             # notify here would double every batch's wakeup storm
-            if self._stragglers_locked() != before:
+            if self.leases.report_rate(service_id, tasks_per_s):
                 self._clock.cond_notify_all(self._lock)
 
     # ------------------------------------------------------------- #
+    def _record_done_locked(self, rec: TaskRecord, result, service_id: str,
+                            now: float) -> None:
+        rec.state = TaskState.DONE
+        rec.result = None if self.reclaim_done else result
+        if self.reclaim_done:
+            rec.payload = None
+        rec.completed_by = service_id
+        self._done_count += 1
+        lease = self.leases.finish(rec.task_id)
+        if lease is not None:
+            self._durations.append(now - lease.start)
+        self.completions_per_service[service_id] = (
+            self.completions_per_service.get(service_id, 0) + 1)
+
     def complete(self, task_id: int, result, service_id: str) -> bool:
         """Idempotent: the first result wins (speculative duplicates are
         dropped).  Returns True if this call recorded the result."""
@@ -393,15 +385,8 @@ class TaskRepository:
             rec = self.records[task_id]
             if rec.state == TaskState.DONE or self._cancelled:
                 return False
-            rec.state = TaskState.DONE
-            rec.result = None if self.reclaim_done else result
-            if self.reclaim_done:
-                rec.payload = None
-            rec.completed_by = service_id
-            self._done_count += 1
-            self._durations.append(self._clock.monotonic() - rec.lease_start)
-            self.completions_per_service[service_id] = (
-                self.completions_per_service.get(service_id, 0) + 1)
+            self._record_done_locked(rec, result, service_id,
+                                     self._clock.monotonic())
             self._clock.cond_notify_all(self._lock)
         if self.on_complete is not None:
             self.on_complete(task_id, result)
@@ -420,15 +405,7 @@ class TaskRepository:
                 rec = self.records[task_id]
                 if rec.state == TaskState.DONE or self._cancelled:
                     continue
-                rec.state = TaskState.DONE
-                rec.result = None if self.reclaim_done else result
-                if self.reclaim_done:
-                    rec.payload = None
-                rec.completed_by = service_id
-                self._done_count += 1
-                self._durations.append(now - rec.lease_start)
-                self.completions_per_service[service_id] = (
-                    self.completions_per_service.get(service_id, 0) + 1)
+                self._record_done_locked(rec, result, service_id, now)
                 recorded.append((task_id, result))
             if recorded:
                 self._clock.cond_notify_all(self._lock)
@@ -441,32 +418,24 @@ class TaskRepository:
         """A service died / errored mid-task: reschedule (the paper's natural
         descheduling point is the task start, so we simply re-enqueue)."""
         with self._lock:
-            rec = self.records[task_id]
-            rec.owners.discard(service_id)
             if self._cancelled:
+                self.leases.fail(task_id, service_id)
                 return  # a cancelled stream never re-enqueues work
-            if rec.state == TaskState.LEASED and not rec.owners:
+            rec = self.records[task_id]
+            if (self.leases.fail(task_id, service_id)
+                    and rec.state == TaskState.LEASED):
                 rec.state = TaskState.PENDING
                 self._pending.append(task_id)
                 self.reschedules += 1
                 self._clock.cond_notify_all(self._lock)
 
     def _expire_leases_locked(self) -> None:
-        """Re-enqueue leases past their deadline.
-
-        Pops only the expired prefix of the deadline heap — O(k log n)
-        per call instead of the full-table scan, which was O(n) on
-        *every* get_task/get_batch wakeup.  Heap entries are lazily
-        deleted: a record that was completed, failed back, or re-leased
-        since its entry was pushed no longer matches on
-        (state, deadline) and is skipped."""
-        now = self._clock.monotonic()
-        while self._lease_heap and self._lease_heap[0][0] <= now:
-            deadline, tid = heapq.heappop(self._lease_heap)
+        """Re-enqueue leases past their deadline (the LeaseTable pops only
+        the actually-expired heap prefix)."""
+        for tid in self.leases.expired(self._clock.monotonic()):
             rec = self.records[tid]
-            if rec.state != TaskState.LEASED or rec.lease_deadline != deadline:
-                continue  # stale entry
-            rec.owners.clear()
+            if rec.state != TaskState.LEASED:
+                continue
             rec.state = TaskState.PENDING
             self._pending.append(tid)
             self.reschedules += 1
@@ -480,15 +449,14 @@ class TaskRepository:
         with self._lock:
             if self._cancelled:
                 return 0
-            for rec in self.records.values():
-                if rec.state != TaskState.LEASED or service_id not in rec.owners:
+            for tid in self.leases.expire_service(service_id):
+                rec = self.records[tid]
+                if rec.state != TaskState.LEASED:
                     continue
-                rec.owners.discard(service_id)
-                if not rec.owners:
-                    rec.state = TaskState.PENDING
-                    self._pending.append(rec.task_id)
-                    self.reschedules += 1
-                    expired += 1
+                rec.state = TaskState.PENDING
+                self._pending.append(tid)
+                self.reschedules += 1
+                expired += 1
             if expired:
                 self._clock.cond_notify_all(self._lock)
         return expired
@@ -542,9 +510,8 @@ class TaskRepository:
             "pending": len(self._pending),
             "leased": leased,
             "reschedules": self.reschedules,
-            "speculative_issues": self.speculative_issues,
-            "straggler_speculations": self.straggler_speculations,
-            "service_rates": dict(self._service_rates),
+            "peak_unfinished": self.peak_unfinished,
+            **self.leases.stats(),
             "per_service": dict(self.completions_per_service),
         }
 

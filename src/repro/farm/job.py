@@ -72,7 +72,15 @@ class Job:
                  max_batch: int = 1, max_inflight: int = 1,
                  adaptive_batching: bool = True,
                  target_batch_latency_s: float = 0.05,
-                 on_lease: Callable | None = None):
+                 on_lease: Callable | None = None,
+                 reclaim_done: bool = True, collect_results: bool = True):
+        """``reclaim_done``/``collect_results`` are the two memory knobs
+        the single-tenant adapters flip: a farm job (both True is the
+        default ``reclaim_done``) drops repository copies and buffers
+        results for its one consumer iterator; ``BasicClient`` keeps the
+        repository copies instead (``reclaim_done=False``) and skips the
+        consumer buffer (``collect_results=False``) — its deliverable is
+        ``repository.results()`` in submission order."""
         if weight <= 0:
             raise ValueError("job weight must be > 0")
         if max_batch < 1 or max_inflight < 1:
@@ -93,10 +101,11 @@ class Job:
         if on_lease is not None:
             repo_on_lease = (lambda tid, sid, att, t:
                              on_lease(job_id, tid, sid, att, t))
+        self._collect = collect_results
         self.repository = TaskRepository(
             [], lease_s=lease_s, streaming=True, clock=self.clock,
             on_complete=self._on_complete, on_lease=repo_on_lease,
-            reclaim_done=True)
+            reclaim_done=reclaim_done)
 
         self._cond = threading.Condition()
         self._state = JobState.QUEUED
@@ -109,7 +118,6 @@ class Job:
         self._feeders: list[threading.Thread] = []
         self.service_time_s = 0.0
         self.tasks_by_service: dict[str, int] = {}
-        self.peak_unfinished = 0
         self.submitted_at = self.clock.monotonic()
         self.started_at: float | None = None
         self.finished_at: float | None = None
@@ -205,18 +213,21 @@ class Job:
         """Append one task to the job's stream; returns its task id
         (submission index).  Raises :class:`JobCancelled` after cancel
         and ``RuntimeError`` after :meth:`close`."""
-        with self._cond:
-            if self._state is JobState.CANCELLED:
-                raise JobCancelled(self.job_id)
-        tid = self.repository.add_task(payload)
-        u = self.repository.unfinished()
-        with self._cond:
-            if u > self.peak_unfinished:
-                self.peak_unfinished = u
-        return tid
+        return self.add_tasks([payload])[0]
 
     def add_tasks(self, tasks: Iterable[Any]) -> list[int]:
-        return [self.add_task(t) for t in tasks]
+        """Append a whole batch under ONE repository lock acquisition
+        (``TaskRepository.add_tasks``, which also tracks the
+        peak-unfinished high-water mark) — the bulk-registration path
+        ``FarmExecutor.map`` and finite-job submission ride, and the
+        single lock round-trip per call the streaming ``submit`` path
+        pays."""
+        try:
+            return self.repository.add_tasks(list(tasks))
+        except RuntimeError:
+            if self.repository.cancelled:
+                raise JobCancelled(self.job_id) from None
+            raise
 
     def close(self) -> None:
         """No more tasks will be added; the job finishes when the last
@@ -271,8 +282,9 @@ class Job:
         with self._cond:
             if self._state is JobState.CANCELLED:
                 return
-            self._results[task_id] = result
-            self._arrival.append(task_id)
+            if self._collect:
+                self._results[task_id] = result
+                self._arrival.append(task_id)
             self._delivered += 1
             self.clock.cond_notify_all(self._cond)
         self._maybe_finished()
@@ -292,6 +304,10 @@ class Job:
         self.scheduler._job_finished(self)
 
     def _claim(self, mode: str) -> None:
+        if not self._collect:
+            raise RuntimeError(
+                f"job {self.job_id} was created without result collection "
+                f"(collect_results=False); read repository.results() instead")
         with self._cond:
             if self._consumer is not None and self._consumer != mode:
                 raise RuntimeError(
@@ -392,7 +408,7 @@ class Job:
                 "weight": self._weight,
                 "services": sorted(self._services),
                 "service_time_s": self.service_time_s,
-                "peak_unfinished": self.peak_unfinished,
+                "peak_unfinished": repo["peak_unfinished"],
                 "submitted_at": self.submitted_at,
                 "started_at": self.started_at,
                 "finished_at": self.finished_at,

@@ -1,15 +1,20 @@
-"""FarmScheduler: the persistent multi-tenant farm service.
+"""FarmScheduler: THE dispatch engine — one core, many front-ends.
 
 JJPF's value proposition (paper §1, §3) is that many independent
 applications time-share one CoW/NoW with no reconfiguration — but the
-paper's arbitration is first-come-first-served: a ``BasicClient``
-recruits every registered service and keeps it until it exits.  The
-scheduler replaces that with an explicit, persistent arbiter:
+paper's arbitration is first-come-first-served: whoever recruits first
+keeps the service until it exits.  The scheduler replaces that with an
+explicit, persistent arbiter, and since the engine unification it is the
+*only* recruitment/dispatch/teardown implementation in the repo: the
+single-tenant ``BasicClient`` is "a scheduler with exactly one job" and
+``FarmExecutor`` is a futures veneer over one open-stream
+:class:`~repro.farm.job.Job`.
 
-- it **owns the pool**: every service that registers with the
-  ``LookupService`` is recruited by the scheduler (and heartbeated if its
-  transport needs it) and stays recruited until the scheduler shuts down,
-  when it is released back to the lookup;
+- it **owns the pool** through a :class:`repro.core.pool.ServicePool`:
+  every service that registers with the ``LookupService`` is recruited
+  (and heartbeated if its transport needs it) and stays recruited until
+  the scheduler shuts down, when it is released back to the lookup
+  exactly once;
 - applications are **jobs** (:class:`~repro.farm.job.Job`): submit →
   admission control (at most ``max_concurrent_jobs`` running, FIFO queue
   beyond that) → weighted fair share of the pool → done/cancelled;
@@ -22,13 +27,14 @@ scheduler replaces that with an explicit, persistent arbiter:
   revocation or death re-enqueue through the ordinary lease machinery, so
   reassignment is safe mid-batch and loses nothing.
 
-Concurrency contract: one re-entrant scheduler lock guards all maps; it
-is never held across a blocking clock wait, so the whole scheduler runs
-deterministically under a :class:`~repro.sim.VirtualClock` — the
-multi-tenant fairness tests pin exact assignment traces, not statistics.
-The scheduler spawns no thread of its own: rebalances run synchronously
-on whichever thread delivered the event (submitter, control thread,
-lookup observer), which keeps the sim schedule free of hidden pollers.
+Concurrency contract: one re-entrant scheduler lock guards all maps (the
+pool shares it); it is never held across a blocking clock wait, so the
+whole scheduler runs deterministically under a
+:class:`~repro.sim.VirtualClock` — the multi-tenant fairness tests pin
+exact assignment traces, not statistics.  The scheduler spawns no thread
+of its own: rebalances run synchronously on whichever thread delivered
+the event (submitter, control thread, lookup observer), which keeps the
+sim schedule free of hidden pollers.
 """
 
 from __future__ import annotations
@@ -37,22 +43,22 @@ import threading
 from collections import deque
 from typing import Any, Callable, Iterable, Sequence
 
-from repro.core.client import ControlThread
 from repro.core.clock import REAL_CLOCK
 from repro.core.discovery import LookupService, ServiceDescriptor
-from repro.core.transport import LivenessMonitor, ServiceHandle, resolve_handle
+from repro.core.lease import ControlThread
+from repro.core.pool import ServicePool, clock_join
+from repro.core.transport import ServiceHandle
 
 from .arbiter import fair_assignment
 from .job import Job
 
-_EPS = 1e-9
-
 
 class _Slot:
-    """The ControlThread owner binding one (job, service) pair — the same
-    duck-typed control surface :class:`~repro.core.client.BasicClient`
-    exposes, so the unmodified control-thread loops (per-task, batched
-    AIMD, drain-on-revoke) serve multi-tenant jobs."""
+    """The ControlThread owner binding one (job, service) pair — the
+    duck-typed control surface (clock, program, repository, batching
+    knobs, stop event, finish/error callbacks) the unmodified
+    control-thread loops (per-task, batched AIMD, drain-on-revoke) run
+    against."""
 
     def __init__(self, scheduler: "FarmScheduler", job: Job,
                  handle: ServiceHandle):
@@ -91,11 +97,17 @@ class FarmScheduler:
                  adaptive_batching: bool = True,
                  target_batch_latency_s: float = 0.05,
                  on_lease: Callable | None = None,
+                 elastic: bool = True,
+                 admit: Callable[[ServiceDescriptor], bool] | None = None,
                  name: str = "farm"):
         """``max_batch``/``max_inflight``/... are *defaults* for submitted
         jobs (overridable per job).  ``on_lease(job_id, task_id,
         service_id, attempt, t)`` is the cross-job assignment-trace hook
-        (the sim wires it into ``SimCluster.trace``)."""
+        (the sim wires it into ``SimCluster.trace``).  ``elastic=False``
+        skips the lookup subscription: only services registered at
+        :meth:`start` are recruited (the single-tenant front-ends expose
+        this).  ``admit`` is an optional recruitment gate
+        ``(descriptor) -> bool`` — performance contracts plug in here."""
         if max_concurrent_jobs < 1:
             raise ValueError("max_concurrent_jobs must be >= 1")
         self.lookup = lookup if lookup is not None else LookupService()
@@ -103,6 +115,7 @@ class FarmScheduler:
         self.name = name
         self.client_id = f"{name}-scheduler"
         self.max_concurrent_jobs = max_concurrent_jobs
+        self.elastic = elastic
         self.defaults = dict(
             lease_s=lease_s, speculation=speculation, max_batch=max_batch,
             max_inflight=max_inflight, adaptive_batching=adaptive_batching,
@@ -112,12 +125,14 @@ class FarmScheduler:
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._started = False
-        self._unsubscribe = None
-        self._monitor: LivenessMonitor | None = None
-        self._handles: dict[str, ServiceHandle] = {}   # the recruited pool
-        self._speed: dict[str, float] = {}
+        self.pool = ServicePool(
+            self.lookup, lock=self._lock, clock=self.clock,
+            client_id=self.client_id, admit=admit,
+            on_join=self._service_joined, on_dead=self._service_dead,
+            on_lost=self._service_lost)
         self._assignment: dict[str, str] = {}          # sid -> job_id
         self._threads: dict[str, ControlThread] = {}   # sid -> live thread
+        self._batching: dict[str, dict] = {}           # sid -> last snapshot
         self._jobs: dict[str, Job] = {}
         self._running: list[str] = []                  # admission order
         self._queue: deque[str] = deque()              # FIFO admission queue
@@ -131,16 +146,14 @@ class FarmScheduler:
 
     # ---------------- lifecycle ------------------------------------ #
     def start(self) -> "FarmScheduler":
-        """Recruit everything currently registered and subscribe for
-        future registrations; idempotent."""
+        """Recruit everything currently registered (and, when elastic,
+        subscribe for future registrations); idempotent."""
         with self._lock:
             if self._started:
                 return self
             self._started = True
-            self._unsubscribe = self.lookup.subscribe(
-                self._on_register, self._on_unregister)
-            for desc in self.lookup.query():
-                self._add_service_locked(desc)
+            self.pool.open(elastic=self.elastic)
+            self._rebalance_locked()
         return self
 
     def __enter__(self) -> "FarmScheduler":
@@ -149,86 +162,59 @@ class FarmScheduler:
     def __exit__(self, *exc) -> None:
         self.shutdown()
 
-    def shutdown(self, *, grace_s: float = 10.0) -> None:
-        """Cancel unfinished jobs, stop every control thread (clock-aware
-        join), and release all services back to the lookup — the pool
-        outlives the scheduler.  Idempotent."""
+    def recruit(self, desc: ServiceDescriptor) -> bool:
+        """Recruit one specific service into the pool (subject to the
+        ``admit`` gate) — the autonomic-control surface
+        :class:`~repro.core.contracts.ApplicationManager` drives."""
+        return self.pool.recruit(desc)
+
+    def shutdown(self, *, grace_s: float = 10.0, join: bool = True) -> None:
+        """Cancel unfinished jobs, stop every control thread, and release
+        all services back to the lookup exactly once — the pool outlives
+        the scheduler.  Idempotent.
+
+        With ``join`` (default) the control threads are reaped clock-aware
+        for up to ``grace_s`` before the release — what makes an *aborted*
+        run safe on a shared pool (a released-while-busy service could be
+        recruited by another client mid-execute).  ``join=False`` releases
+        eagerly: the single-tenant success path uses it so trailing
+        speculative duplicates never stretch the makespan — safe there
+        because every job is already done and stragglers' results are
+        discarded idempotently."""
         with self._lock:
             self._started = True  # a never-started scheduler just closes
             self.clock.event_set(self._stop)
-            if self._unsubscribe is not None:
-                self._unsubscribe()
-                self._unsubscribe = None
             jobs = [j for j in self._jobs.values() if not j.done]
-            monitor, self._monitor = self._monitor, None
             threads = list(self._threads.values())
+        self.pool.stop_recruiting()
         for job in jobs:
             job.cancel()
-        if monitor is not None:
-            monitor.stop()
-        # clock-aware join: control threads notice _stop at their next
-        # lease boundary; a raw Thread.join would deadlock a VirtualClock
-        deadline = self.clock.monotonic() + grace_s
-        for t in threads:
-            while t.is_alive() and self.clock.monotonic() < deadline:
-                self.clock.sleep(0.02)
+        self.pool.stop_monitor()
+        if join:
+            # clock-aware reap: control threads notice _stop at their next
+            # lease boundary; a raw Thread.join would deadlock a VirtualClock
+            clock_join(self.clock, threads, grace_s)
         with self._lock:
-            handles = list(self._handles.values())
-            self._handles.clear()
-            self._speed.clear()
             self._assignment.clear()
-            self._threads.clear()
-        for h in handles:
-            try:
-                h.release()
-            except Exception:
-                pass
-            h.close()
+        self.pool.release_all()
 
     # ---------------- pool membership ------------------------------ #
-    def _on_register(self, desc: ServiceDescriptor) -> None:
-        with self._lock:
-            if self._stop.is_set():
-                return
-            self._add_service_locked(desc)
-
-    def _on_unregister(self, service_id: str) -> None:
-        # only meaningful for services we never managed to recruit (a
-        # rival client got there first, or the node died pre-recruitment)
-        with self._lock:
-            if self._stop.is_set() or service_id in self._handles:
-                return
-            self.trace.append(("service-lost",
-                               round(self.clock.monotonic(), 9), service_id))
-
-    def _add_service_locked(self, desc: ServiceDescriptor) -> bool:
-        sid = desc.service_id
-        if sid in self._handles:
-            return True
-        handle = resolve_handle(desc, lookup=self.lookup)
-        if handle is None:
-            return False
-        # enter the map before recruiting: recruit() unregisters the
-        # service from the lookup, and _on_unregister must see it as ours
-        self._handles[sid] = handle
-        if not handle.recruit(self.client_id):
-            del self._handles[sid]
-            handle.close()
-            return False
-        self._speed[sid] = max(
-            float(handle.capabilities.get("speed_factor") or 1.0), _EPS)
+    def _service_joined(self, sid: str, handle: ServiceHandle) -> None:
+        # ServicePool.on_join — under the scheduler lock
         self.trace.append(("service-join",
                            round(self.clock.monotonic(), 9), sid))
-        if handle.needs_heartbeat:
-            if self._monitor is None:
-                self._monitor = LivenessMonitor(clock=self.clock)
-            self._monitor.watch(handle, self._service_dead)
         self._rebalance_locked()
-        return True
+
+    def _service_lost(self, sid: str) -> None:
+        # a service we never recruited left the lookup (rival client, or
+        # died pre-recruitment) — under the scheduler lock
+        self.trace.append(("service-lost",
+                           round(self.clock.monotonic(), 9), sid))
 
     def _service_dead(self, service_id: str) -> None:
-        """LivenessMonitor verdict: expire the dead node's leases *now*
-        (its job re-leases them elsewhere immediately) and drop it."""
+        """LivenessMonitor verdict (ServicePool.on_dead): expire the dead
+        node's leases *now* (its job re-leases them elsewhere immediately)
+        and drop it."""
         with self._lock:
             thread = self._threads.get(service_id)
             job = thread.client.job if thread is not None else None
@@ -240,27 +226,25 @@ class FarmScheduler:
             self._rebalance_locked()
 
     def _forget_service_locked(self, sid: str, *, reason: str) -> None:
-        handle = self._handles.pop(sid, None)
-        if handle is None:
+        if not self.pool.forget(sid):
             return
-        self._speed.pop(sid, None)
         self._assignment.pop(sid, None)
-        if self._monitor is not None and handle.needs_heartbeat:
-            self._monitor.unwatch(sid)
-        handle.close()
         self.trace.append((reason, round(self.clock.monotonic(), 9), sid))
 
     # ---------------- job lifecycle -------------------------------- #
     def submit(self, program, tasks: Sequence[Any] | Iterable[Any] | None = None,
                *, weight: float = 1.0, name: str | None = None,
-               **knobs) -> Job:
+               autostart: bool = True, **knobs) -> Job:
         """Submit a job.  With ``tasks`` the stream is finite and closes
         immediately (the job finishes when the last task completes);
         without, it is open — feed it with ``Job.add_task`` /
         ``Job.submit_stream`` and ``Job.close`` it.  ``knobs`` override
         the scheduler-wide per-job defaults (``max_batch``, ``lease_s``,
         ...).  Admission control: beyond ``max_concurrent_jobs`` running
-        jobs, submissions queue FIFO."""
+        jobs, submissions queue FIFO.  ``autostart=False`` registers the
+        job without starting the engine (recruitment happens at the
+        caller's later :meth:`start` — the single-tenant adapters defer
+        it to their own run verb)."""
         merged = dict(self.defaults)
         merged.update(knobs)
         # materialize and load the task source OUTSIDE the scheduler lock:
@@ -269,7 +253,8 @@ class FarmScheduler:
         # no half-registered job behind
         task_list = list(tasks) if tasks is not None else None
         with self._lock:
-            self.start()
+            if autostart:
+                self.start()
             if self._stop.is_set():
                 raise RuntimeError("cannot submit after shutdown")
             job_id = f"job-{self._seq}"
@@ -348,12 +333,12 @@ class FarmScheduler:
         if not self._started or self._stop.is_set():
             return
         self.rebalances += 1
-        capacities = {sid: 1.0 / self._speed[sid] for sid in self._handles}
+        capacities = self.pool.capacities()
         jobs = [(jid, self._jobs[jid].weight, self._jobs[jid]._demand())
                 for jid in self._running]
         desired = fair_assignment(capacities, jobs, self._assignment)
         now = round(self.clock.monotonic(), 9)
-        for sid in sorted(self._handles):
+        for sid in self.pool.ids():
             new = desired.get(sid)
             old = self._assignment.get(sid)
             if new == old:
@@ -379,7 +364,7 @@ class FarmScheduler:
         if jid is None:
             return  # idle — stays recruited, waiting for the next job
         job = self._jobs.get(jid)
-        handle = self._handles.get(sid)
+        handle = self.pool.handle(sid)
         if job is None or job.done or handle is None:
             self._assignment.pop(sid, None)
             return
@@ -405,6 +390,7 @@ class FarmScheduler:
         with self._lock:
             if self._threads.get(slot.sid) is thread:
                 del self._threads[slot.sid]
+            self._accumulate_batching_locked(slot.sid, thread)
             slot.job._service_detached(
                 slot.sid, self.clock.monotonic() - slot.started_at,
                 thread.tasks_done)
@@ -420,10 +406,25 @@ class FarmScheduler:
             self._dispatch_locked(slot.sid)
 
     # ---------------- introspection -------------------------------- #
+    def _merged_snapshot_locked(self, sid: str,
+                                thread: ControlThread) -> dict:
+        # THE accumulation rule, in one place: dispatch counts accumulate
+        # across this service's successive threads; controller state and
+        # the handle's compile-cache counters (already cumulative) come
+        # from the latest binding
+        snap = thread.snapshot()
+        prev = self._batching.get(sid)
+        if prev is not None:
+            snap["batches_dispatched"] += prev["batches_dispatched"]
+        return snap
+
+    def _accumulate_batching_locked(self, sid: str,
+                                    thread: ControlThread) -> None:
+        self._batching[sid] = self._merged_snapshot_locked(sid, thread)
+
     @property
     def n_services(self) -> int:
-        with self._lock:
-            return len(self._handles)
+        return len(self.pool)
 
     def jobs(self) -> list[Job]:
         with self._lock:
@@ -439,16 +440,32 @@ class FarmScheduler:
             return sorted(s for s, j in self._assignment.items()
                           if j == job.job_id)
 
+    def batching_stats(self) -> dict[str, dict]:
+        """Per-service batching/compile telemetry (adaptive-controller
+        state, batches dispatched, cache hits), covering live control
+        threads and the accumulated history of exited ones."""
+        with self._lock:
+            merged = dict(self._batching)
+            for sid, thread in self._threads.items():
+                merged[sid] = self._merged_snapshot_locked(sid, thread)
+            return merged
+
     def stats(self) -> dict:
+        """THE engine-level snapshot — every front-end's ``stats()``
+        embeds this one shape (per-service pool membership + assignment,
+        batching telemetry, job lifecycle)."""
+        batching = self.batching_stats()
         with self._lock:
             return {
-                "services": {sid: {"speed_factor": self._speed[sid],
-                                   "job": self._assignment.get(sid)}
-                             for sid in sorted(self._handles)},
-                "n_services": len(self._handles),
+                "services": {
+                    sid: {"speed_factor": self.pool.speed(sid),
+                          "job": self._assignment.get(sid)}
+                    for sid in self.pool.ids()},
+                "n_services": len(self.pool),
                 "running": list(self._running),
                 "queued": list(self._queue),
                 "rebalances": self.rebalances,
                 "revocations": self.revocations,
+                "batching": batching,
                 "jobs": {jid: j.stats() for jid, j in self._jobs.items()},
             }

@@ -133,6 +133,15 @@ class NowPool:
             raise RuntimeError("NowPool was built without a lookup")
         return FarmScheduler(self.lookup, **cfg)
 
+    def executor(self, program, **knobs):
+        """A :class:`repro.core.FarmExecutor` over this pool of worker
+        processes — the futures front-end of the same engine."""
+        from repro.core.futures import FarmExecutor
+
+        if self.lookup is None:
+            raise RuntimeError("NowPool was built without a lookup")
+        return FarmExecutor(program, lookup=self.lookup, **knobs)
+
     # ------------------------------------------------------------- #
     def kill(self, index: int, sig: int = signal.SIGKILL) -> None:
         """Kill a live worker process — SIGKILL by default, because the

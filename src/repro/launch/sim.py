@@ -77,6 +77,13 @@ class SimPool:
         ``NowPool.scheduler``."""
         return self.cluster.make_scheduler(**cfg)
 
+    def executor(self, program, **knobs):
+        """A :class:`repro.core.FarmExecutor` over this pool (lookup +
+        virtual clock pre-wired) — the futures front-end of the same
+        engine; collect with ``executor.gather`` under the virtual
+        clock."""
+        return self.cluster.make_executor(program, **knobs)
+
     def kill(self, index: int) -> None:
         """Kill a live worker — instant scripted death, the sim analog of
         ``NowPool.kill``'s SIGKILL."""

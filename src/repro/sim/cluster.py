@@ -322,6 +322,18 @@ class SimCluster:
         out = client.compute(timeout=timeout)
         return out, client
 
+    def make_executor(self, program, **knobs):
+        """A FarmExecutor wired to this cluster (lookup + virtual clock +
+        assignment-trace hook) — the third front-end over the same
+        engine; collect futures with ``executor.gather`` (clock-aware),
+        never ``Future.result()`` (which would block the cooperative
+        scheduler invisibly)."""
+        from repro.core.futures import FarmExecutor
+
+        knobs.setdefault("lease_s", 1.0)
+        return FarmExecutor(program, lookup=self.lookup, clock=self.clock,
+                            on_lease=self._record_lease, **knobs)
+
     def _record_job_lease(self, job_id, task_id, service_id, attempt,
                           t) -> None:
         # multi-tenant twin of _record_lease: task ids are per-job, so

@@ -17,6 +17,20 @@ if importlib.util.find_spec("hypothesis") is not None:
     settings.load_profile("repro")
 
 
+def pytest_addoption(parser):
+    # pytest-timeout is an optional test dependency (hang protection for
+    # clock-seam regressions — a farm path that bypasses the Clock seam
+    # deadlocks instead of failing; CI installs it).  When the plugin is
+    # absent, register its ini keys as no-ops so the `timeout` settings
+    # in pyproject.toml don't warn the suite into noise.
+    if importlib.util.find_spec("pytest_timeout") is None:
+        for name in ("timeout", "timeout_method"):
+            try:
+                parser.addini(name, "no-op fallback: pytest-timeout absent")
+            except Exception:
+                pass
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -459,8 +459,8 @@ def test_compute_timeout_releases_services_and_joins_threads():
         with pytest.raises(TimeoutError):
             client.compute(timeout=0.5)
         # every control thread joined, every service back in the lookup
-        assert not any(t.is_alive() for t in client._threads)
-        assert not client._recruited
+        assert not any(t.is_alive() for t in client.engine._threads.values())
+        assert client.engine.n_services == 0
         assert cluster.lookup.wait_for_services(3, timeout_s=5.0)
         # the capacity is immediately reusable
         out, c2 = cluster.run(PROG, _tasks(30), max_batch=4)
