@@ -38,6 +38,19 @@ def run_engine_overhead(args) -> None:
     mod.main(["--out", args.engine_out])
 
 
+def run_scale(args) -> None:
+    """The NoW-scale scheduler gate: per-dispatch overhead curve, trace
+    determinism, incremental-vs-full arbiter equivalence, churn and
+    join-burst coalescing; writes ``BENCH_scale.json``.  CI runs a
+    reduced configuration (200 services / 100k tasks); the full 1,000 /
+    1M figures are produced locally with ``benchmarks/scale.py``."""
+    from benchmarks import scale as mod
+
+    mod.main(["--services", str(args.scale_services),
+              "--tasks", str(args.scale_tasks),
+              "--out", args.scale_out])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--compare-batched", action="store_true",
@@ -48,6 +61,13 @@ def main() -> None:
                          "gate (BasicClient/FarmExecutor vs raw "
                          "FarmScheduler; writes BENCH_engine.json)")
     ap.add_argument("--engine-out", default="BENCH_engine.json")
+    ap.add_argument("--scale", action="store_true",
+                    help="only run the NoW-scale scheduler stress gate "
+                         "(overhead curve + determinism + churn; writes "
+                         "BENCH_scale.json)")
+    ap.add_argument("--scale-services", type=int, default=200)
+    ap.add_argument("--scale-tasks", type=int, default=100_000)
+    ap.add_argument("--scale-out", default="BENCH_scale.json")
     ap.add_argument("--services", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=2)
@@ -62,15 +82,18 @@ def main() -> None:
     if args.engine_overhead:
         run_engine_overhead(args)
         return
+    if args.scale:
+        run_scale(args)
+        return
 
     from benchmarks import (elasticity, engine_overhead, farm_scalability,
                             fault_tolerance, heterogeneous_now, kernels,
-                            load_balance, multi_tenant, normal_form)
+                            load_balance, multi_tenant, normal_form, scale)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
                 elasticity, heterogeneous_now, multi_tenant, engine_overhead,
-                kernels):
+                scale, kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
 

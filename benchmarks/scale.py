@@ -1,0 +1,332 @@
+"""NoW-scale stress: 1,000 sim services, 1M-task streams, churn bursts.
+
+The paper's claim is that a trivially simple task farm scales across
+whatever commodity nodes show up; the survey it leans on (arXiv
+cs/0612105) singles out *coordination overhead* as what actually caps
+task-farm throughput once pools grow.  This benchmark drives the real
+farm stack over the deterministic ``sim://`` backend at Network-of-
+Workstations scale and gates the scheduler's own data structures:
+
+- **overhead curve** — the same task stream over 4 services and over N
+  (default 1,000): wall-clock scheduler seconds per dispatched task must
+  stay within ``OVERHEAD_RATIO_CEILING`` of the 4-service figure (it was
+  superlinear before the incremental arbiter / heap clock / counter
+  stats), and the arbiter must actually recompute only O(jobs) times;
+- **trace determinism at scale** — the same seed must reproduce the
+  byte-identical lease + scheduler event trace, and the incremental
+  arbiter must produce the byte-identical traces to the legacy
+  full-recompute path (``incremental_arbiter=False``) on the same seed;
+- **churn** — seeded loud deaths, silent deaths and late joins
+  (``FaultSpec`` schedules) over a streaming job: exactly-once results
+  (count and checksum), determinism, and a bounded recompute count;
+- **coalescing** — N services registering at the same virtual instant
+  must cost O(1) arbiter recomputes, not N (the burst-window regression
+  gate).
+
+Memory discipline: lease traces are folded into a running SHA-256
+instead of stored (a 1M-task trace list would dwarf the farm state), so
+the full 1k/1M configuration runs in O(window) memory.
+
+Rows land in ``BENCH_scale.json`` (a CI artifact via
+``benchmarks/run.py --scale``, at reduced sizes: 200 services / 100k
+tasks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import hashlib
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Program  # noqa: E402
+from repro.sim import FaultSpec, SimCluster  # noqa: E402
+
+PROGRAM = Program(lambda x: x * 3.0 + 1.0, name="affine", jit=False)
+
+OVERHEAD_RATIO_CEILING = 3.0   # per-dispatch wall overhead, N vs 4 services
+REBALANCE_CEILING = 16         # arbiter recomputes, steady single-job run
+COALESCE_CEILING = 10          # recomputes for an N-service join burst
+
+
+class _HashingTrace:
+    """A list-shaped sink that folds every appended event into a running
+    SHA-256 — the determinism artifact without the 1M-entry list."""
+
+    __slots__ = ("n", "_h")
+
+    def __init__(self):
+        self.n = 0
+        self._h = hashlib.sha256()
+
+    def append(self, item) -> None:
+        self.n += 1
+        self._h.update(repr(item).encode())
+
+    def digest(self) -> str:
+        return self._h.hexdigest()
+
+
+def _trace_hash(events) -> str:
+    h = hashlib.sha256()
+    for item in events:
+        h.update(repr(item).encode())
+    return h.hexdigest()
+
+
+def run_stream(*, n_services: int, n_tasks: int, seed: int,
+               incremental: bool = True, faults: dict | None = None,
+               collect: bool = False, speculation: bool = False,
+               max_batch: int = 8, target_makespan_s: float = 0.6,
+               scenario: str = "stream") -> dict:
+    """One streaming job over ``n_services`` homogeneous sim services;
+    returns per-dispatch wall overhead, recompute counters, and the
+    lease/scheduler trace hashes."""
+    base_cost_s = target_makespan_s * n_services / n_tasks
+    window = max(1024, 4 * n_services * max_batch)
+    t0 = time.perf_counter()
+    with SimCluster(speed_factors=[1.0] * n_services, seed=seed,
+                    base_cost_s=base_cost_s, latency_s=0.0,
+                    faults=faults, stall_timeout_s=900.0) as cluster:
+        cluster.trace = _HashingTrace()  # hash, don't store (1M leases)
+        sched = cluster.make_scheduler(
+            max_batch=max_batch, max_inflight=1, adaptive_batching=False,
+            speculation=speculation, incremental_arbiter=incremental)
+        with sched:
+            t_submit = time.perf_counter()
+            job = sched.submit(PROGRAM, None, collect_results=collect)
+            job.submit_stream((float(i) for i in range(n_tasks)),
+                              window=window)
+            delivered = 0
+            checksum = 0.0
+            if collect:
+                for _tid, result in job.as_completed():
+                    delivered += 1
+                    checksum += float(result)
+            job.wait(timeout=600)
+            wall_run_s = time.perf_counter() - t_submit
+            stats = job.stats()
+            row = {
+                "scenario": scenario,
+                "n_services": n_services,
+                "n_tasks": n_tasks,
+                "incremental_arbiter": incremental,
+                "done": stats["done"],
+                "delivered": delivered if collect else None,
+                "checksum": checksum if collect else None,
+                "virtual_makespan_s": cluster.clock.monotonic(),
+                "rebalances": sched.rebalances,
+                "rebalance_requests": sched.rebalance_requests,
+                "revocations": sched.revocations,
+                "reschedules": stats["reschedules"],
+                "per_dispatch_us": wall_run_s * 1e6 / n_tasks,
+                "lease_trace_hash": cluster.trace.digest(),
+                "lease_trace_len": cluster.trace.n,
+            }
+            cluster.clock.sleep(5.0)  # quiesce (silent-death hangs drain)
+            row["sched_trace_hash"] = _trace_hash(sched.trace)
+    row["wall_s"] = time.perf_counter() - t0
+    return row
+
+
+def churn_faults(n_services: int, *, die_frac: float = 0.05,
+                 silent_frac: float = 0.03, late_frac: float = 0.05,
+                 target_makespan_s: float = 0.6) -> dict[int, FaultSpec]:
+    """A deterministic churn schedule: the first ``die_frac`` of the pool
+    dies loudly mid-run, the next ``silent_frac`` wedges silently, and
+    the last ``late_frac`` only registers after the run is under way."""
+    faults: dict[int, FaultSpec] = {}
+    n_die = int(n_services * die_frac)
+    n_silent = int(n_services * silent_frac)
+    n_late = int(n_services * late_frac)
+    for i in range(n_die):
+        faults[i] = FaultSpec(die_at=0.3 * target_makespan_s)
+    for i in range(n_die, n_die + n_silent):
+        faults[i] = FaultSpec(die_at=0.5 * target_makespan_s, silent=True,
+                              hang_s=2.0)
+    for i in range(n_services - n_late, n_services):
+        faults[i] = FaultSpec(register_at=0.25 * target_makespan_s)
+    return faults
+
+
+def run_coalescing(*, n_late: int, seed: int, n_tasks: int = 4000,
+                   max_batch: int = 8) -> dict:
+    """4 baseline services plus ``n_late`` registering at the same
+    virtual instant mid-run: the join burst must cost O(1) recomputes."""
+    t0 = time.perf_counter()
+    faults = {4 + i: FaultSpec(register_at=0.3) for i in range(n_late)}
+    # 4 baseline services alone would take ~1.0 virtual s, so the burst
+    # at t=0.3 lands mid-run and the joiners pick up real work.
+    with SimCluster(speed_factors=[1.0] * (4 + n_late), seed=seed,
+                    base_cost_s=4.0 / n_tasks, latency_s=0.0,
+                    faults=faults, stall_timeout_s=900.0) as cluster:
+        cluster.trace = _HashingTrace()
+        sched = cluster.make_scheduler(max_batch=max_batch, max_inflight=1,
+                                       adaptive_batching=False,
+                                       speculation=False)
+        with sched:
+            job = sched.submit(PROGRAM, [float(i) for i in range(n_tasks)])
+            job.wait(timeout=600)
+            cluster.clock.sleep(2.0)  # let any straggling joins land
+            row = {
+                "scenario": "coalescing/join-burst",
+                "n_late_joiners": n_late,
+                "rebalances": sched.rebalances,
+                "rebalance_requests": sched.rebalance_requests,
+                "n_services_at_end": sched.n_services,
+                "virtual_makespan_s": job.stats()["finished_at"],
+            }
+    row["wall_s"] = time.perf_counter() - t0
+    return row
+
+
+def bench() -> list[tuple[str, float, str]]:
+    """Harness entry (``benchmarks/run.py`` table) — smoke sizes."""
+    small = run_stream(n_services=4, n_tasks=2000, seed=7,
+                       scenario="overhead/4")
+    big = run_stream(n_services=64, n_tasks=2000, seed=7,
+                     scenario="overhead/64")
+    return [
+        ("scale/per-dispatch-4svc", small["per_dispatch_us"],
+         f"rebalances={small['rebalances']}"),
+        ("scale/per-dispatch-64svc", big["per_dispatch_us"],
+         f"ratio={big['per_dispatch_us'] / small['per_dispatch_us']:.2f}"),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--services", type=int, default=1000,
+                    help="pool size for the big legs (CI uses 200)")
+    ap.add_argument("--tasks", type=int, default=1_000_000,
+                    help="stream length for the overhead legs "
+                         "(CI uses 100k)")
+    ap.add_argument("--churn-tasks", type=int, default=None,
+                    help="stream length for the churn legs "
+                         "(default tasks // 20)")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help="write rows to this JSON file "
+                         "(e.g. BENCH_scale.json)")
+    args = ap.parse_args(argv)
+    # the run allocates millions of short-lived tuples (trace events,
+    # lease records); collector pauses add ~15% noise to the overhead
+    # ratio, so measure with the GC off like the other benchmarks
+    gc.disable()
+    churn_tasks = (args.churn_tasks if args.churn_tasks is not None
+                   else max(args.tasks // 20, 2000))
+    kw = dict(seed=args.seed, max_batch=args.max_batch)
+    rows = []
+
+    # -- overhead curve: 4 services vs N, same stream ------------------ #
+    small = run_stream(n_services=4, n_tasks=args.tasks,
+                       scenario="overhead/4svc", **kw)
+    big = run_stream(n_services=args.services, n_tasks=args.tasks,
+                     scenario=f"overhead/{args.services}svc", **kw)
+    ratio = big["per_dispatch_us"] / small["per_dispatch_us"]
+    big["overhead_ratio_vs_4svc"] = ratio
+    assert ratio <= OVERHEAD_RATIO_CEILING, (
+        f"per-dispatch scheduler overhead at {args.services} services is "
+        f"{ratio:.2f}x the 4-service figure (ceiling "
+        f"{OVERHEAD_RATIO_CEILING}x)")
+    for r in (small, big):
+        assert r["done"] == args.tasks, f"{r['scenario']}: lost tasks"
+        assert r["rebalances"] <= REBALANCE_CEILING, (
+            f"{r['scenario']}: {r['rebalances']} arbiter recomputes for a "
+            f"single steady job (ceiling {REBALANCE_CEILING})")
+    rows += [small, big]
+
+    # -- determinism + incremental==full at scale ---------------------- #
+    big2 = run_stream(n_services=args.services, n_tasks=args.tasks,
+                      scenario=f"overhead/{args.services}svc/rerun", **kw)
+    assert big2["lease_trace_hash"] == big["lease_trace_hash"], (
+        "same seed produced a different lease trace at scale")
+    assert big2["sched_trace_hash"] == big["sched_trace_hash"], (
+        "same seed produced a different scheduler event trace at scale")
+    full = run_stream(n_services=args.services, n_tasks=args.tasks,
+                      incremental=False,
+                      scenario=f"overhead/{args.services}svc/full-arbiter",
+                      **kw)
+    assert full["lease_trace_hash"] == big["lease_trace_hash"], (
+        "incremental arbiter diverged from the full recompute "
+        "(lease trace)")
+    assert full["sched_trace_hash"] == big["sched_trace_hash"], (
+        "incremental arbiter diverged from the full recompute "
+        "(scheduler trace)")
+    big["trace_deterministic"] = True
+    big["incremental_matches_full"] = True
+    rows.append(full)
+
+    # -- churn: deaths + late joins over a streaming job --------------- #
+    faults = churn_faults(args.services)
+    closed_form = 3.0 * churn_tasks * (churn_tasks - 1) / 2.0 + churn_tasks
+    churn = run_stream(n_services=args.services, n_tasks=churn_tasks,
+                       faults=faults, collect=True, speculation=True,
+                       scenario=f"churn/{args.services}svc", **kw)
+    assert churn["delivered"] == churn_tasks and \
+        churn["done"] == churn_tasks, (
+            f"churn lost tasks: delivered {churn['delivered']} of "
+            f"{churn_tasks}")
+    assert abs(churn["checksum"] - closed_form) < 1e-6 * closed_form, (
+        "churn results checksum mismatch (duplicate or corrupted result)")
+    churn2 = run_stream(n_services=args.services, n_tasks=churn_tasks,
+                        faults=faults, collect=True, speculation=True,
+                        scenario=f"churn/{args.services}svc/rerun", **kw)
+    assert churn2["lease_trace_hash"] == churn["lease_trace_hash"], (
+        "same seed produced a different lease trace under churn")
+    churn_full = run_stream(n_services=args.services, n_tasks=churn_tasks,
+                            faults=faults, collect=True, speculation=True,
+                            incremental=False,
+                            scenario=f"churn/{args.services}svc/full-arbiter",
+                            **kw)
+    assert churn_full["lease_trace_hash"] == churn["lease_trace_hash"], (
+        "incremental arbiter diverged from full recompute under churn")
+    churn["trace_deterministic"] = True
+    churn["incremental_matches_full"] = True
+    rows += [churn, churn_full]
+
+    # -- coalescing: a same-instant join burst is one recompute -------- #
+    burst = run_coalescing(n_late=min(100, args.services), seed=args.seed)
+    assert burst["rebalance_requests"] >= burst["n_late_joiners"], (
+        "burst did not generate per-join rebalance requests")
+    assert burst["rebalances"] <= COALESCE_CEILING, (
+        f"{burst['rebalances']} recomputes for a "
+        f"{burst['n_late_joiners']}-service join burst (ceiling "
+        f"{COALESCE_CEILING})")
+    rows.append(burst)
+
+    for r in rows:
+        per = r.get("per_dispatch_us", 0.0)
+        print(f"scale/{r['scenario']},{per:.2f},"
+              f"rebalances={r['rebalances']} "
+              f"requests={r['rebalance_requests']} "
+              f"wall={r['wall_s']:.1f}s")
+
+    if args.out:
+        payload = {
+            "benchmark": "scale",
+            "backend": "sim",
+            "seed": args.seed,
+            "params": {"services": args.services, "tasks": args.tasks,
+                       "churn_tasks": churn_tasks,
+                       "max_batch": args.max_batch,
+                       "overhead_ratio_ceiling": OVERHEAD_RATIO_CEILING,
+                       "rebalance_ceiling": REBALANCE_CEILING,
+                       "coalesce_ceiling": COALESCE_CEILING},
+            "rows": [{k: v for k, v in r.items()
+                      if not k.startswith("_")} for r in rows],
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

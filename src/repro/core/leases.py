@@ -55,6 +55,11 @@ class LeaseTable:
         # (deadline, task_id) min-heap with lazy deletion: expiry scans
         # only the actually-expired prefix instead of the full table
         self._heap: list[tuple[float, int]] = []
+        # service_id -> task_ids it holds a lease on: a heartbeat-declared
+        # death touches only that service's leases instead of walking the
+        # whole table (1,000 services sharing one farm make the full walk
+        # per death the dominant recovery cost)
+        self._by_owner: dict[str, set[int]] = {}
         self._service_rates: dict[str, float] = {}  # observed tasks/second
         self.speculative_issues = 0
         self.straggler_speculations = 0
@@ -63,11 +68,22 @@ class LeaseTable:
     def __len__(self) -> int:
         return len(self._leases)
 
+    def _index_owner(self, service_id: str, task_id: int) -> None:
+        self._by_owner.setdefault(service_id, set()).add(task_id)
+
+    def _unindex_owner(self, service_id: str, task_id: int) -> None:
+        owned = self._by_owner.get(service_id)
+        if owned is not None:
+            owned.discard(task_id)
+            if not owned:
+                del self._by_owner[service_id]
+
     def lease(self, task_id: int, service_id: str, attempt: int,
               now: float) -> None:
         lease = Lease(task_id, {service_id}, start=now,
                       deadline=now + self.lease_s)
         self._leases[task_id] = lease
+        self._index_owner(service_id, task_id)
         heapq.heappush(self._heap, (lease.deadline, task_id))
         if self.on_lease is not None:
             self.on_lease(task_id, service_id, attempt, now)
@@ -78,6 +94,7 @@ class LeaseTable:
         owner's problem; speculative copies never extend it)."""
         lease = self._leases[task_id]
         lease.owners.add(service_id)
+        self._index_owner(service_id, task_id)
         self.speculative_issues += 1
         if lease.straggler_hit:
             lease.straggler_hit = False
@@ -85,10 +102,17 @@ class LeaseTable:
         if self.on_lease is not None:
             self.on_lease(task_id, service_id, attempt, now)
 
+    def _drop_locked(self, lease: Lease) -> None:
+        for sid in lease.owners:
+            self._unindex_owner(sid, lease.task_id)
+
     def finish(self, task_id: int) -> Lease | None:
         """The task completed: drop its lease (returns it, for duration
         accounting), or None if no lease was live (a late duplicate)."""
-        return self._leases.pop(task_id, None)
+        lease = self._leases.pop(task_id, None)
+        if lease is not None:
+            self._drop_locked(lease)
+        return lease
 
     def fail(self, task_id: int, service_id: str) -> bool:
         """``service_id`` failed the task back.  Returns True when the
@@ -97,7 +121,9 @@ class LeaseTable:
         lease = self._leases.get(task_id)
         if lease is None:
             return False
-        lease.owners.discard(service_id)
+        if service_id in lease.owners:
+            lease.owners.discard(service_id)
+            self._unindex_owner(service_id, task_id)
         if lease.owners:
             return False
         del self._leases[task_id]
@@ -116,18 +142,19 @@ class LeaseTable:
             if lease is None or lease.deadline != deadline:
                 continue  # stale entry
             del self._leases[tid]
+            self._drop_locked(lease)
             lapsed.append(tid)
         return lapsed
 
     def expire_service(self, service_id: str) -> list[int]:
         """Heartbeat-declared death: drop every lease held *solely* by
-        ``service_id`` (returned for immediate re-enqueue) and remove it
-        from shared speculative leases."""
+        ``service_id`` (returned for immediate re-enqueue, in task-id
+        order) and remove it from shared speculative leases.  Touches
+        only the dead service's leases via the owner index — O(owned),
+        not O(table)."""
         sole: list[int] = []
-        for tid in sorted(self._leases):
+        for tid in sorted(self._by_owner.pop(service_id, ())):
             lease = self._leases[tid]
-            if service_id not in lease.owners:
-                continue
             lease.owners.discard(service_id)
             if not lease.owners:
                 del self._leases[tid]
@@ -138,6 +165,7 @@ class LeaseTable:
         """Terminal (repository cancelled): no lease may outlive it."""
         self._leases.clear()
         self._heap.clear()
+        self._by_owner.clear()
 
     def next_deadline(self) -> float | None:
         """Earliest live deadline — the cap on repository waits that

@@ -87,6 +87,19 @@ class ServicePool:
         self._monitor: LivenessMonitor | None = None
         self._handles: dict[str, ServiceHandle] = {}
         self._speed: dict[str, float] = {}
+        # membership-derived views (sorted ids, capacities) are cached and
+        # invalidated on join/forget/release: the scheduler reads them on
+        # every rebalance, and rebuilding a 1,000-entry sorted list (or a
+        # dict of divisions) per event is exactly the per-event O(S) cost
+        # the incremental arbiter exists to avoid
+        self._version = 0
+        self._ids_cache: list[str] | None = None
+        self._caps_cache: dict[str, float] | None = None
+
+    def _membership_changed_locked(self) -> None:
+        self._version += 1
+        self._ids_cache = None
+        self._caps_cache = None
 
     # ---------------- membership ----------------------------------- #
     def open(self, *, elastic: bool = True) -> None:
@@ -141,6 +154,7 @@ class ServicePool:
                 return False
             self._speed[sid] = max(
                 float(handle.capabilities.get("speed_factor") or 1.0), _EPS)
+            self._membership_changed_locked()
             if handle.needs_heartbeat:
                 if self._monitor is None:
                     self._monitor = LivenessMonitor(clock=self.clock)
@@ -163,6 +177,7 @@ class ServicePool:
             if handle is None:
                 return False
             self._speed.pop(service_id, None)
+            self._membership_changed_locked()
             if self._monitor is not None and handle.needs_heartbeat:
                 self._monitor.unwatch(service_id)
             handle.close()
@@ -193,6 +208,7 @@ class ServicePool:
             handles = list(self._handles.values())
             self._handles.clear()
             self._speed.clear()
+            self._membership_changed_locked()
         for h in handles:
             try:
                 h.release()
@@ -214,19 +230,34 @@ class ServicePool:
             return self._handles.get(service_id)
 
     def ids(self) -> list[str]:
+        """Sorted service ids; the returned list is a membership-keyed
+        cache — treat it as immutable."""
         with self._lock:
-            return sorted(self._handles)
+            if self._ids_cache is None:
+                self._ids_cache = sorted(self._handles)
+            return self._ids_cache
 
     def speed(self, service_id: str) -> float:
         with self._lock:
             return self._speed.get(service_id, 1.0)
 
+    def version(self) -> int:
+        """Monotonic membership version: bumps on every join/forget/
+        release — the cache key for anything derived from the member
+        set (the incremental arbiter's sorted order, these caches)."""
+        with self._lock:
+            return self._version
+
     def capacities(self) -> dict[str, float]:
         """service_id -> capacity (1 / speed_factor), the arbiter's
         currency: a 4×-slower node counts for a quarter of a baseline
-        node."""
+        node.  The returned dict is a membership-keyed cache — treat it
+        as immutable."""
         with self._lock:
-            return {sid: 1.0 / s for sid, s in self._speed.items()}
+            if self._caps_cache is None:
+                self._caps_cache = {sid: 1.0 / s
+                                    for sid, s in self._speed.items()}
+            return self._caps_cache
 
     def membership(self) -> dict[str, dict]:
         with self._lock:

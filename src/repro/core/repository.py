@@ -73,7 +73,18 @@ class TaskRepository:
                  streaming: bool = False, clock=None, on_lease=None,
                  straggler_rate_factor: float = 0.5,
                  reclaim_done: bool = False):
-        self._lock = threading.Condition()
+        # two conditions over ONE lock: ``_lock`` is the *progress*
+        # condition (completions, close, cancel — watched by wait_all /
+        # wait_until / the streaming backpressure wait: one or two
+        # waiters), ``_work`` is the *leaser* condition (new or
+        # re-enqueued tasks — watched by every control thread parked in
+        # get_task/get_batch).  Splitting them keeps a completion from
+        # waking N idle leasers who will find nothing: at 1,000 services
+        # that thundering herd was O(services × completions) token
+        # hand-offs, the dominant sim cost at NoW scale.
+        lock = threading.RLock()
+        self._lock = threading.Condition(lock)
+        self._work = threading.Condition(lock)
         self._clock = clock if clock is not None else REAL_CLOCK
         self.leases = LeaseTable(
             lease_s=lease_s, speculation_factor=speculation_factor,
@@ -92,6 +103,11 @@ class TaskRepository:
         # to the tail — list.pop(0) was O(n) per lease under batched dispatch
         self._pending: deque[int] = deque(self.records.keys())
         self._done_count = 0
+        # records currently in state LEASED, maintained at every state
+        # transition — stats() must never walk a million records to
+        # count them (it is called from hot paths: wait_until predicates,
+        # per-job scheduler snapshots)
+        self._leased_count = 0
         self._durations: list[float] = []
         self.completions_per_service: dict[str, int] = {}
         self.reschedules = 0
@@ -147,7 +163,7 @@ class TaskRepository:
         """End a streaming repository: no more tasks will be added."""
         with self._lock:
             self._closed = True
-            self._clock.cond_notify_all(self._lock)
+            self._notify_all_locked()
 
     def cancel(self) -> int:
         """Terminal, idempotent: drop every pending task, stop handing out
@@ -168,10 +184,12 @@ class TaskRepository:
             # arrive) are dropped by the guards in complete/fail, and a
             # cancelled repository must never read as holding leases
             self.leases.clear()
-            for rec in self.records.values():
-                if rec.state == TaskState.LEASED:
-                    rec.state = TaskState.PENDING
-            self._clock.cond_notify_all(self._lock)
+            if self._leased_count:
+                for rec in self.records.values():
+                    if rec.state == TaskState.LEASED:
+                        rec.state = TaskState.PENDING
+            self._leased_count = 0
+            self._notify_all_locked()
             return dropped
 
     def add_task(self, payload) -> int:
@@ -195,7 +213,7 @@ class TaskRepository:
             if unfinished > self.peak_unfinished:
                 self.peak_unfinished = unfinished
             if tids:
-                self._clock.cond_notify_all(self._lock)
+                self._notify_all_locked()
             return tids
 
     def unfinished(self) -> int:
@@ -229,6 +247,7 @@ class TaskRepository:
                       now: float) -> None:
         rec.state = TaskState.LEASED
         rec.attempts += 1
+        self._leased_count += 1
         self.leases.lease(rec.task_id, service_id, rec.attempts, now)
 
     # ------------------------------------------------------------- #
@@ -247,9 +266,15 @@ class TaskRepository:
                 if (self._done_count == len(self.records)
                         and not (self.streaming and not self._closed)):
                     return None
-                if self._pending:
+                while self._pending:
                     tid = self._pending.popleft()
                     rec = self.records[tid]
+                    if rec.state != TaskState.PENDING:
+                        # stale queue entry: the task was re-enqueued by an
+                        # expiry and then completed by its original owner
+                        # before anyone re-leased it — leasing it again
+                        # would re-run (and double-count) a DONE task
+                        continue
                     self._lease_locked(rec, service_id,
                                        self._clock.monotonic())
                     return tid, rec.payload
@@ -299,6 +324,8 @@ class TaskRepository:
                     while self._pending and len(batch) < max_batch:
                         tid = self._pending.popleft()
                         rec = self.records[tid]
+                        if rec.state != TaskState.PENDING:
+                            continue  # stale entry (see get_task)
                         if compatible is None:
                             key = None
                         elif rec.group_key_set:
@@ -337,7 +364,13 @@ class TaskRepository:
             # expired entries were popped at loop top, so the gap is > 0
             remaining = min(remaining,
                             max(next_deadline - self._clock.monotonic(), 1e-6))
-        self._clock.cond_wait(self._lock, remaining)
+        self._clock.cond_wait(self._work, remaining)
+
+    def _notify_all_locked(self) -> None:
+        """Wake leasers (``_work``) and progress watchers (``_lock``) —
+        for events that create leasable work or end the repository."""
+        self._clock.cond_notify_all(self._work)
+        self._clock.cond_notify_all(self._lock)
 
     def _speculation_candidate_locked(self, service_id: str):
         return self.leases.speculation_candidate(
@@ -361,11 +394,13 @@ class TaskRepository:
             # reported once per drained batch, and an unconditional
             # notify here would double every batch's wakeup storm
             if self.leases.report_rate(service_id, tasks_per_s):
-                self._clock.cond_notify_all(self._lock)
+                self._notify_all_locked()
 
     # ------------------------------------------------------------- #
     def _record_done_locked(self, rec: TaskRecord, result, service_id: str,
                             now: float) -> None:
+        if rec.state == TaskState.LEASED:
+            self._leased_count -= 1
         rec.state = TaskState.DONE
         rec.result = None if self.reclaim_done else result
         if self.reclaim_done:
@@ -387,7 +422,15 @@ class TaskRepository:
                 return False
             self._record_done_locked(rec, result, service_id,
                                      self._clock.monotonic())
+            # completions wake progress watchers only — leasers parked in
+            # get_task/get_batch gain nothing from a task finishing, and
+            # waking all N of them per completion is the O(N²) herd.  The
+            # one completion they DO care about is the last one: it turns
+            # "wait for work" into "stream exhausted, return None".
             self._clock.cond_notify_all(self._lock)
+            if (self._done_count == len(self.records)
+                    and (self._closed or not self.streaming)):
+                self._clock.cond_notify_all(self._work)
         if self.on_complete is not None:
             self.on_complete(task_id, result)
         return True
@@ -408,7 +451,11 @@ class TaskRepository:
                 self._record_done_locked(rec, result, service_id, now)
                 recorded.append((task_id, result))
             if recorded:
+                # progress watchers only, same as complete(): see there
                 self._clock.cond_notify_all(self._lock)
+                if (self._done_count == len(self.records)
+                        and (self._closed or not self.streaming)):
+                    self._clock.cond_notify_all(self._work)
         if self.on_complete is not None:
             for task_id, result in recorded:
                 self.on_complete(task_id, result)
@@ -425,9 +472,10 @@ class TaskRepository:
             if (self.leases.fail(task_id, service_id)
                     and rec.state == TaskState.LEASED):
                 rec.state = TaskState.PENDING
+                self._leased_count -= 1
                 self._pending.append(task_id)
                 self.reschedules += 1
-                self._clock.cond_notify_all(self._lock)
+                self._notify_all_locked()
 
     def _expire_leases_locked(self) -> None:
         """Re-enqueue leases past their deadline (the LeaseTable pops only
@@ -437,6 +485,7 @@ class TaskRepository:
             if rec.state != TaskState.LEASED:
                 continue
             rec.state = TaskState.PENDING
+            self._leased_count -= 1
             self._pending.append(tid)
             self.reschedules += 1
 
@@ -454,11 +503,12 @@ class TaskRepository:
                 if rec.state != TaskState.LEASED:
                     continue
                 rec.state = TaskState.PENDING
+                self._leased_count -= 1
                 self._pending.append(tid)
                 self.reschedules += 1
                 expired += 1
             if expired:
-                self._clock.cond_notify_all(self._lock)
+                self._notify_all_locked()
         return expired
 
     # ------------------------------------------------------------- #
@@ -501,14 +551,21 @@ class TaskRepository:
             return [self.records[i].result for i in sorted(self.records)]
 
     def _stats_locked(self) -> dict:
-        leased = sum(1 for r in self.records.values()
-                     if r.state == TaskState.LEASED)
+        # every figure here is a counter maintained at event time — this
+        # snapshot is O(services), never O(tasks), so per-rebalance and
+        # per-wait stats checks stay flat as streams reach millions
         return {
             "tasks": len(self.records),
             "done": self._done_count,
             "cancelled": self._cancelled,
-            "pending": len(self._pending),
-            "leased": leased,
+            # derived, not len(_pending): the queue may briefly hold stale
+            # entries for tasks that completed between expiry and re-lease
+            # (a cancelled repository reads 0 — its queue is dropped even
+            # though interrupted records sit in PENDING state)
+            "pending": (0 if self._cancelled
+                        else len(self.records) - self._done_count
+                        - self._leased_count),
+            "leased": self._leased_count,
             "reschedules": self.reschedules,
             "peak_unfinished": self.peak_unfinished,
             **self.leases.stats(),

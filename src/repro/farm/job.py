@@ -113,6 +113,8 @@ class Job:
         self._results: dict[int, Any] = {}     # completed, unconsumed
         self._arrival: deque[int] = deque()    # completion order
         self._delivered = 0                    # results handed to this job
+        self._added = 0                        # tasks submitted to the stream
+        self._stream_closed = False            # mirrors repository.closed
         self._consumer: str | None = None      # "completed" | "ordered"
         self._services: set[str] = set()       # currently attached
         self._feeders: list[threading.Thread] = []
@@ -160,10 +162,17 @@ class Job:
 
     def _demand(self) -> int | None:
         """Max services this job can use: its unfinished task count once
-        the stream is closed, unbounded while it can still grow."""
-        if not self.repository.closed:
-            return None
-        return self.repository.unfinished()
+        the stream is closed, unbounded while it can still grow.
+
+        Maintained as counters (tasks added minus results delivered, both
+        updated at event time under the job condition) — the scheduler
+        consults every running job's demand on every rebalance, and a
+        pair of repository-lock round-trips per job per rebalance was
+        measurable coordination overhead at NoW scale."""
+        with self._cond:
+            if not self._stream_closed:
+                return None
+            return max(self._added - self._delivered, 0)
 
     def _mark_running(self) -> None:
         with self._cond:
@@ -223,15 +232,20 @@ class Job:
         single lock round-trip per call the streaming ``submit`` path
         pays."""
         try:
-            return self.repository.add_tasks(list(tasks))
+            tids = self.repository.add_tasks(list(tasks))
         except RuntimeError:
             if self.repository.cancelled:
                 raise JobCancelled(self.job_id) from None
             raise
+        with self._cond:
+            self._added += len(tids)
+        return tids
 
     def close(self) -> None:
         """No more tasks will be added; the job finishes when the last
         outstanding task completes (immediately, if none are left)."""
+        with self._cond:
+            self._stream_closed = True
         self.repository.close()
         self.scheduler._job_demand_changed(self)
         self._maybe_finished()

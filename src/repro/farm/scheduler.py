@@ -31,10 +31,23 @@ Concurrency contract: one re-entrant scheduler lock guards all maps (the
 pool shares it); it is never held across a blocking clock wait, so the
 whole scheduler runs deterministically under a
 :class:`~repro.sim.VirtualClock` — the multi-tenant fairness tests pin
-exact assignment traces, not statistics.  The scheduler spawns no thread
-of its own: rebalances run synchronously on whichever thread delivered
-the event (submitter, control thread, lookup observer), which keeps the
-sim schedule free of hidden pollers.
+exact assignment traces, not statistics.
+
+Rebalance cost model (the NoW-scale contract): *job* events (submit,
+finish, weight change, stream close) rebalance synchronously on the
+thread that delivered them — there are few jobs, and their tests expect
+the new shares immediately.  *Pool* events (join, death) only mark the
+assignment dirty and are coalesced: a lazily-spawned, clock-enrolled
+rebalancer thread waits out a short window (``rebalance_coalesce_s``)
+and recomputes once per burst — 100 workstations registering at startup,
+or a rack dying together, cost one arbiter run instead of 100.  A
+scheduler that never sees a deferred event never spawns the thread, so
+single-tenant fixed-pool runs keep the pre-coalescing schedule exactly.
+The arbiter itself runs behind an :class:`~repro.farm.arbiter.
+IncrementalArbiter` (membership-incremental sorted order + fixpoint
+memo) unless ``incremental_arbiter=False`` pins the legacy
+full-recompute path — the scale benchmark gates on the two producing
+byte-identical traces.
 """
 
 from __future__ import annotations
@@ -49,7 +62,7 @@ from repro.core.lease import ControlThread
 from repro.core.pool import ServicePool, clock_join
 from repro.core.transport import ServiceHandle
 
-from .arbiter import fair_assignment
+from .arbiter import IncrementalArbiter, fair_assignment
 from .job import Job
 
 
@@ -99,6 +112,8 @@ class FarmScheduler:
                  on_lease: Callable | None = None,
                  elastic: bool = True,
                  admit: Callable[[ServiceDescriptor], bool] | None = None,
+                 incremental_arbiter: bool = True,
+                 rebalance_coalesce_s: float = 0.01,
                  name: str = "farm"):
         """``max_batch``/``max_inflight``/... are *defaults* for submitted
         jobs (overridable per job).  ``on_lease(job_id, task_id,
@@ -107,7 +122,11 @@ class FarmScheduler:
         skips the lookup subscription: only services registered at
         :meth:`start` are recruited (the single-tenant front-ends expose
         this).  ``admit`` is an optional recruitment gate
-        ``(descriptor) -> bool`` — performance contracts plug in here."""
+        ``(descriptor) -> bool`` — performance contracts plug in here.
+        ``incremental_arbiter=False`` pins the legacy full-recompute
+        arbiter path (the equivalence baseline the scale gates compare
+        against); ``rebalance_coalesce_s`` is the burst window pool
+        events (joins/deaths) are coalesced over before one recompute."""
         if max_concurrent_jobs < 1:
             raise ValueError("max_concurrent_jobs must be >= 1")
         self.lookup = lookup if lookup is not None else LookupService()
@@ -137,8 +156,15 @@ class FarmScheduler:
         self._running: list[str] = []                  # admission order
         self._queue: deque[str] = deque()              # FIFO admission queue
         self._seq = 0
-        self.rebalances = 0
+        self.rebalances = 0           # arbiter recomputes actually run
+        self.rebalance_requests = 0   # events that asked for one
         self.revocations = 0
+        self._arbiter = IncrementalArbiter() if incremental_arbiter else None
+        self.rebalance_coalesce_s = rebalance_coalesce_s
+        self._dirty = False           # a deferred rebalance is owed
+        self._sweeping = False        # inside start()'s recruit sweep
+        self._rebalancer: threading.Thread | None = None
+        self._rebalance_cond = threading.Condition(self._lock)
         #: scheduler event trace — with a VirtualClock, THE determinism
         #: artifact: ("service-join"|"service-dead"|"service-lost"|
         #: "job-submit"|"job-start"|"assign"|"job-end", t, ...)
@@ -152,7 +178,15 @@ class FarmScheduler:
             if self._started:
                 return self
             self._started = True
-            self.pool.open(elastic=self.elastic)
+            # the initial recruit sweep is the canonical join burst: N
+            # services are already registered, and each on_join would be
+            # a rebalance — mark dirty through the sweep, recompute once
+            self._sweeping = True
+            try:
+                self.pool.open(elastic=self.elastic)
+            finally:
+                self._sweeping = False
+            self._dirty = False
             self._rebalance_locked()
         return self
 
@@ -186,6 +220,9 @@ class FarmScheduler:
             self.clock.event_set(self._stop)
             jobs = [j for j in self._jobs.values() if not j.done]
             threads = list(self._threads.values())
+            if self._rebalancer is not None:
+                threads.append(self._rebalancer)
+                self.clock.cond_notify_all(self._rebalance_cond)
         self.pool.stop_recruiting()
         for job in jobs:
             job.cancel()
@@ -203,7 +240,9 @@ class FarmScheduler:
         # ServicePool.on_join — under the scheduler lock
         self.trace.append(("service-join",
                            round(self.clock.monotonic(), 9), sid))
-        self._rebalance_locked()
+        if self._arbiter is not None:
+            self._arbiter.service_joined(sid, 1.0 / self.pool.speed(sid))
+        self._request_rebalance_locked(defer=True)
 
     def _service_lost(self, sid: str) -> None:
         # a service we never recruited left the lookup (rival client, or
@@ -223,11 +262,13 @@ class FarmScheduler:
                 job.repository.expire_service(service_id)
             if thread is not None:
                 thread.revoke()
-            self._rebalance_locked()
+            self._request_rebalance_locked(defer=True)
 
     def _forget_service_locked(self, sid: str, *, reason: str) -> None:
         if not self.pool.forget(sid):
             return
+        if self._arbiter is not None:
+            self._arbiter.service_left(sid)
         self._assignment.pop(sid, None)
         self.trace.append((reason, round(self.clock.monotonic(), 9), sid))
 
@@ -272,7 +313,7 @@ class FarmScheduler:
                                float(weight)))
             if len(self._running) < self.max_concurrent_jobs:
                 self._start_job_locked(job)
-                self._rebalance_locked()
+                self._request_rebalance_locked(defer=False)
             else:
                 self._queue.append(job_id)
             if task_list is not None:
@@ -310,12 +351,12 @@ class FarmScheduler:
             if self._stop.is_set():
                 return
             self._admit_locked()
-            self._rebalance_locked()
+            self._request_rebalance_locked(defer=False)
 
     def _priority_changed(self, job: Job) -> None:
         with self._lock:
             if job.job_id in self._running and not self._stop.is_set():
-                self._rebalance_locked()
+                self._request_rebalance_locked(defer=False)
 
     def _job_demand_changed(self, job: Job) -> None:
         """A stream closed: its demand became finite — surplus services
@@ -323,9 +364,57 @@ class FarmScheduler:
         to finish."""
         with self._lock:
             if job.job_id in self._running and not self._stop.is_set():
-                self._rebalance_locked()
+                self._request_rebalance_locked(defer=False)
 
     # ---------------- the arbiter loop ----------------------------- #
+    def _request_rebalance_locked(self, *, defer: bool) -> None:
+        """One rebalance, please.  ``defer=False`` (job events) runs it
+        now on the calling thread; ``defer=True`` (pool events) marks the
+        assignment dirty and lets the rebalancer thread fold the whole
+        burst into one recompute after ``rebalance_coalesce_s``.  During
+        :meth:`start`'s recruit sweep everything just marks dirty — the
+        sweep ends with one synchronous flush and no thread is spawned."""
+        self.rebalance_requests += 1
+        if self._sweeping:
+            self._dirty = True
+            return
+        if not defer or self._stop.is_set():
+            self._dirty = False
+            self._rebalance_locked()
+            return
+        self._dirty = True
+        if self._rebalancer is None:
+            self._rebalancer = threading.Thread(
+                target=self._rebalance_loop, daemon=True,
+                name=f"{self.name}-rebalancer")
+            self.clock.thread_spawned(self._rebalancer)
+            self._rebalancer.start()
+        else:
+            self.clock.cond_notify_all(self._rebalance_cond)
+
+    def _rebalance_loop(self) -> None:
+        """The coalescing rebalancer: sleep until marked dirty, let the
+        burst window close, recompute once.  Clock-enrolled, so under a
+        VirtualClock a burst of same-instant joins/deaths is *provably*
+        one recompute: every event lands before the window's virtual
+        deadline."""
+        self.clock.thread_attach()
+        try:
+            while True:
+                with self._rebalance_cond:
+                    while not self._dirty and not self._stop.is_set():
+                        self.clock.cond_wait(self._rebalance_cond, 0.5)
+                    if self._stop.is_set():
+                        return
+                # burst window: scheduler lock released while we wait
+                self.clock.sleep(self.rebalance_coalesce_s)
+                with self._lock:
+                    if self._dirty and not self._stop.is_set():
+                        self._dirty = False
+                        self._rebalance_locked()
+        finally:
+            self.clock.thread_retire()
+
     def _rebalance_locked(self) -> None:
         """Recompute the fair-share service→job map and apply the diff:
         changed services are revoked (their thread exits at the next
@@ -333,10 +422,13 @@ class FarmScheduler:
         if not self._started or self._stop.is_set():
             return
         self.rebalances += 1
-        capacities = self.pool.capacities()
         jobs = [(jid, self._jobs[jid].weight, self._jobs[jid]._demand())
                 for jid in self._running]
-        desired = fair_assignment(capacities, jobs, self._assignment)
+        if self._arbiter is not None:
+            desired = self._arbiter.compute(jobs, self._assignment)
+        else:
+            desired = fair_assignment(self.pool.capacities(), jobs,
+                                      self._assignment)
         now = round(self.clock.monotonic(), 9)
         for sid in self.pool.ids():
             new = desired.get(sid)
@@ -396,7 +488,7 @@ class FarmScheduler:
                 thread.tasks_done)
             if not alive:
                 self._forget_service_locked(slot.sid, reason="service-dead")
-                self._rebalance_locked()
+                self._request_rebalance_locked(defer=True)
                 return
             if self._stop.is_set():
                 return

@@ -40,10 +40,23 @@ Enrollment protocol (see :class:`repro.core.clock.Clock`):
 A thread that blocks *outside* the clock while holding the token would
 freeze the simulation; every enrolled wait therefore carries a real-time
 stall watchdog (``stall_timeout_s``) that raises instead of hanging CI.
+
+Scheduling cost: token hand-offs are the inner loop of every simulation
+(one per virtual sleep/wait), so the scheduler keeps a lazy-deletion
+min-heap of ``(effective wake, key)`` entries instead of scanning every
+enrolled waiter per hand-off, and an object index for notify/set instead
+of scanning every waiter for a matching ``obj``.  Both are O(log N) /
+O(matched) where the old scans were O(enrolled threads) — the difference
+between a 4-service sim and a 1,000-service one.  Stale heap entries
+(re-park, ready-mark, retire) are invalidated by a per-waiter generation
+counter and skipped on pop; the selection order — min ``(effective wake,
+stable key)`` — is identical to the old full scan, so traces are
+byte-for-byte unchanged.
 """
 
 from __future__ import annotations
 
+import heapq
 import threading
 from collections import defaultdict, deque
 
@@ -51,7 +64,8 @@ from repro.core.clock import Clock
 
 
 class _Waiter:
-    __slots__ = ("key", "event", "parked", "wake", "obj", "ready", "ident")
+    __slots__ = ("key", "event", "parked", "wake", "obj", "ready", "ident",
+                 "gen")
 
     def __init__(self, key: tuple):
         self.key = key                    # (thread name, incarnation)
@@ -61,6 +75,7 @@ class _Waiter:
         self.obj = None                   # condition/event being waited on
         self.ready = False                # woken by notify/set, not timeout
         self.ident: int | None = None     # OS thread id, bound at attach
+        self.gen = 0                      # heap-entry generation (lazy del)
 
 
 class VirtualClock(Clock):
@@ -82,16 +97,40 @@ class VirtualClock(Clock):
         self._pending: dict[str, deque] = defaultdict(deque)  # spawned, unattached
         self._incarnations: dict[str, int] = defaultdict(int)
         self._running: _Waiter | None = None
+        # lazy-deletion scheduling heap: (effective wake, key, gen, waiter);
+        # an entry is live iff the waiter is still parked with that gen.
+        # Parked non-ready waiters always satisfy wake >= _now (time only
+        # advances to the minimum effective wake), and ready-marks push a
+        # fresh entry at _now, so heap order == the old scan's
+        # min(effective wake, key) selection exactly.
+        self._heap: list[tuple[float, tuple, int, _Waiter]] = []
+        # obj -> waiters parked on that condition/event (for notify/set)
+        self._by_obj: dict[object, set[_Waiter]] = {}
 
     # ------------------------------------------------------------- #
     # scheduling core
     # ------------------------------------------------------------- #
-    def _effective_wake(self, w: _Waiter) -> float | None:
-        if w.ready:
-            return self._now
-        if w.wake is None:
-            return None  # drain sentinel: schedulable only when alone
-        return max(w.wake, self._now)
+    def _push_locked(self, w: _Waiter, eff: float) -> None:
+        w.gen += 1
+        heapq.heappush(self._heap, (eff, w.key, w.gen, w))
+
+    def _mark_ready_locked(self, w: _Waiter) -> None:
+        if not w.parked or w.ready:
+            return
+        w.ready = True
+        self._push_locked(w, self._now)  # supersedes the timeout entry
+
+    def _unpark_locked(self, w: _Waiter) -> None:
+        w.parked = False
+        w.ready = False
+        w.gen += 1  # invalidate any heap entries still referencing w
+        if w.obj is not None:
+            peers = self._by_obj.get(w.obj)
+            if peers is not None:
+                peers.discard(w)
+                if not peers:
+                    del self._by_obj[w.obj]
+            w.obj = None
 
     def _schedule_locked(self) -> None:
         """Grant the run token to the parked waiter with the earliest
@@ -99,15 +138,14 @@ class VirtualClock(Clock):
         if self._running is not None:
             return
         best = None
-        best_eff = None
-        for w in self._waiters.values():
-            if not w.parked:
+        while self._heap:
+            eff, _key, gen, w = self._heap[0]
+            if not w.parked or w.gen != gen:
+                heapq.heappop(self._heap)  # stale (re-parked/retired/ready)
                 continue
-            eff = self._effective_wake(w)
-            if eff is None:
-                continue
-            if best is None or (eff, w.key) < (best_eff, best.key):
-                best, best_eff = w, eff
+            heapq.heappop(self._heap)
+            best, best_eff = w, eff
+            break
         if best is None:  # only drain sentinels (or nobody) left
             for w in self._waiters.values():
                 if w.parked and w.wake is None:
@@ -118,9 +156,7 @@ class VirtualClock(Clock):
             # a drain park never advances time
         else:
             self._now = max(self._now, best_eff)
-        best.parked = False
-        best.ready = False
-        best.obj = None
+        self._unpark_locked(best)
         self._running = best
         best.event.set()
 
@@ -143,6 +179,10 @@ class VirtualClock(Clock):
             me.wake = wake
             me.obj = obj
             me.ready = False
+            if obj is not None:
+                self._by_obj.setdefault(obj, set()).add(me)
+            if wake is not None:
+                self._push_locked(me, max(wake, self._now))
             self._running = None
             self._schedule_locked()
         if not me.event.wait(self.stall_timeout_s):
@@ -177,9 +217,8 @@ class VirtualClock(Clock):
 
     def cond_notify_all(self, cond: threading.Condition) -> None:
         with self._mutex:
-            for w in self._waiters.values():
-                if w.parked and w.obj is cond:
-                    w.ready = True
+            for w in tuple(self._by_obj.get(cond, ())):
+                self._mark_ready_locked(w)
         cond.notify_all()  # harmless; covers any unmanaged raw waiter
 
     def event_wait(self, event: threading.Event, timeout: float) -> bool:
@@ -193,9 +232,8 @@ class VirtualClock(Clock):
     def event_set(self, event: threading.Event) -> None:
         event.set()
         with self._mutex:
-            for w in self._waiters.values():
-                if w.parked and w.obj is event:
-                    w.ready = True
+            for w in tuple(self._by_obj.get(event, ())):
+                self._mark_ready_locked(w)
 
     # ------------------------------------------------------------- #
     # thread lifecycle
@@ -209,6 +247,7 @@ class VirtualClock(Clock):
             w.parked = True
             w.ready = True  # runnable as soon as the scheduler reaches it
             w.wake = self._now
+            self._push_locked(w, self._now)
             self._waiters[w.key] = w
             self._pending[name].append(w)
 

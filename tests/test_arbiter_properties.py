@@ -1,0 +1,249 @@
+"""Property-based contract for the fair-share arbiter.
+
+The arbiter is the one piece of the farm whose correctness is a pure
+function — so instead of example tests, this file pins its *laws* over
+randomized inputs:
+
+- **demand cap** — a job never holds more services than unfinished tasks;
+- **well-formedness** — assignments only mention real services/jobs;
+- **determinism** — same inputs, same answer, always;
+- **fixpoint / movement minimization** — feeding the arbiter its own
+  output returns it unchanged: a steady-state rebalance moves nothing;
+- **reference match** — the heap-based production solver agrees exactly
+  with an independent straightforward re-derivation of the canonical-
+  bundle spec (max-deficit greedy, linear scan);
+- **incremental == full** — :class:`IncrementalArbiter` fed any
+  join/leave event sequence answers byte-identically to a fresh
+  ``fair_assignment``, without ever re-sorting its service order.
+
+The laws run twice: a seeded ``random`` sweep that always runs, and a
+``hypothesis`` version (with shrinking) that skips itself when the
+optional dependency is absent (the ``test`` extra installs it in CI).
+"""
+
+import random
+
+import pytest
+
+from repro.farm import fair_assignment
+from repro.farm.arbiter import IncrementalArbiter
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when extra missing
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (test extra)")
+
+CAP_CLASSES = (0.25, 0.5, 1.0, 2.0)
+
+
+# ------------------------------------------------------------------ #
+# an independent re-derivation of the spec (no heap, no caches): walk
+# services from largest capacity, give each to the max-deficit job
+# (admission order breaks ties), then keep incumbents filling canonical
+# slots and fill the rest preferring each service's own pairing.
+# ------------------------------------------------------------------ #
+def reference_assignment(capacities, jobs, current=None):
+    current = current or {}
+    jobs = [(j, w, d) for j, w, d in jobs if d is None or d > 0]
+    if not jobs or not capacities:
+        return {}
+    by_cap = sorted(capacities, key=lambda s: (-capacities[s], s))
+    total_cap = sum(capacities.values())
+    total_w = sum(w for _, w, _ in jobs) or 1.0
+    target = {j: total_cap * w / total_w for j, w, _ in jobs}
+    demand = {j: d for j, _, d in jobs}
+    order = {j: i for i, (j, _, _) in enumerate(jobs)}
+    alloc = {j: 0.0 for j, _, _ in jobs}
+    count = {j: 0 for j, _, _ in jobs}
+    canonical, need = {}, {}
+    for sid in by_cap:
+        best = None
+        for j in alloc:
+            if demand[j] is not None and count[j] >= demand[j]:
+                continue
+            key = (-(target[j] - alloc[j]), order[j])
+            if best is None or key < best[0]:
+                best = (key, j)
+        if best is None:
+            break
+        j = best[1]
+        canonical[sid] = j
+        key = (capacities[sid], j)
+        need[key] = need.get(key, 0) + 1
+        alloc[j] += capacities[sid]
+        count[j] += 1
+    assign = {}
+    for sid in by_cap:
+        j = current.get(sid)
+        if j is not None and need.get((capacities[sid], j), 0) > 0:
+            assign[sid] = j
+            need[(capacities[sid], j)] -= 1
+    for sid in by_cap:
+        if sid in assign:
+            continue
+        cap = capacities[sid]
+        j = canonical.get(sid)
+        if j is None or need.get((cap, j), 0) <= 0:
+            cands = [k for k in alloc if need.get((cap, k), 0) > 0]
+            if not cands:
+                continue
+            j = min(cands, key=lambda k: order[k])
+        assign[sid] = j
+        need[(cap, j)] -= 1
+    return assign
+
+
+# ------------------------------------------------------------------ #
+# the laws, checked on one (capacities, jobs, current) case
+# ------------------------------------------------------------------ #
+def check_laws(capacities, jobs, current, rng):
+    out = fair_assignment(capacities, jobs, current)
+
+    # well-formedness
+    job_ids = {j for j, _, _ in jobs}
+    assert set(out) <= set(capacities)
+    assert set(out.values()) <= job_ids
+
+    # demand cap
+    for j, _w, d in jobs:
+        held = sum(1 for v in out.values() if v == j)
+        if d is not None:
+            assert held <= d, f"job {j} holds {held} > demand {d}"
+
+    # determinism
+    assert fair_assignment(dict(capacities), list(jobs), dict(current)) \
+        == out
+
+    # fixpoint: the arbiter's own output is a no-op rebalance
+    assert fair_assignment(capacities, jobs, out) == out
+
+    # reference match (production heap solver vs straightforward spec)
+    assert reference_assignment(capacities, jobs, current) == out
+
+    # incremental == full, under a shuffled join order plus departures
+    arb = IncrementalArbiter()
+    extra = [f"ghost{i}" for i in range(rng.randrange(0, 3))]
+    joined = list(capacities) + extra
+    rng.shuffle(joined)
+    for sid in joined:
+        arb.service_joined(sid, capacities.get(sid, 1.0))
+    for sid in extra:
+        arb.service_left(sid)
+    assert arb.compute(jobs, current) == out
+    assert arb.resorts == 0, "event-maintained order must never re-sort"
+
+    # changes to already-non-binding demands (d >= pool size: the job
+    # could never hold that many services) are invisible: memo hit,
+    # identical answer
+    n = len(capacities)
+    if n > 0 and all(d is None or d >= n for _, _, d in jobs):
+        bumped = [(j, w, None if d is None else d + 1) for j, w, d in jobs]
+        hits = arb.memo_hits
+        assert arb.compute(bumped, out) == out
+        assert arb.memo_hits == hits + 1
+    return out
+
+
+def random_case(rng):
+    n_services = rng.randrange(0, 13)
+    capacities = {f"s{i:02d}": rng.choice(CAP_CLASSES)
+                  for i in range(n_services)}
+    n_jobs = rng.randrange(0, 5)
+    jobs = [(f"j{i}", rng.choice((0.5, 1.0, 2.0)),
+             rng.choice((None, 0, 1, 2, 5, 15)))
+            for i in range(n_jobs)]
+    # incumbent maps include stale jobs (finished but not yet revoked)
+    current = {sid: rng.choice([f"j{k}" for k in range(n_jobs + 1)])
+               for sid in capacities if rng.random() < 0.5}
+    return capacities, jobs, current
+
+
+def test_arbiter_laws_seeded_sweep():
+    """The always-on sweep: 400 randomized cases across pool shapes,
+    weights, demands and stale incumbents."""
+    rng = random.Random(0xA121)
+    for _ in range(400):
+        capacities, jobs, current = random_case(rng)
+        check_laws(capacities, jobs, current, rng)
+
+
+def test_demand_only_churn_never_resorts_or_resolves():
+    """A closed job counting down a huge demand must not disturb the
+    arbiter at all: sorted order untouched AND every rebalance after the
+    first is a memo hit (the normalized inputs are unchanged)."""
+    arb = IncrementalArbiter()
+    for i in range(50):
+        arb.service_joined(f"s{i:02d}", 1.0)
+    jobs = [("a", 1.0, 100_000), ("b", 1.0, None)]
+    out = arb.compute(jobs, {})
+    solves = arb.solves
+    for d in range(100_000, 99_000, -100):  # 10 demand-only events
+        out = arb.compute([("a", 1.0, d), ("b", 1.0, None)], out)
+    assert arb.solves == solves, "demand-only churn must hit the memo"
+    assert arb.memo_hits >= 10
+    assert arb.resorts == 0
+
+
+def test_membership_churn_never_resorts():
+    """500 random join/leave events maintain the capacity-sorted order
+    by bisection — the full re-sort counter stays at zero and every
+    answer still matches a fresh ``fair_assignment``."""
+    rng = random.Random(7)
+    arb = IncrementalArbiter()
+    live = {}
+    jobs = [("a", 1.0, None), ("b", 2.0, None)]
+    out = {}
+    for i in range(500):
+        if live and rng.random() < 0.4:
+            sid = rng.choice(sorted(live))
+            del live[sid]
+            arb.service_left(sid)
+        else:
+            sid = f"s{i:03d}"
+            live[sid] = rng.choice(CAP_CLASSES)
+            arb.service_joined(sid, live[sid])
+        if rng.random() < 0.2:
+            out = arb.compute(jobs, out)
+            assert out == fair_assignment(live, jobs, out)
+    assert arb.resorts == 0
+
+
+def test_fixpoint_is_exactly_movement_free():
+    """On a heterogeneous pool with binding demands, re-arbitrating the
+    standing assignment revokes nothing (the scheduler relies on this:
+    steady-state rebalances are free)."""
+    capacities = {f"s{i}": c for i, c in
+                  enumerate((1.0, 1.0, 0.5, 0.5, 0.25, 2.0, 1.0))}
+    jobs = [("a", 1.0, 3), ("b", 1.0, None), ("c", 2.0, 2)]
+    out = fair_assignment(capacities, jobs)
+    for _ in range(5):
+        nxt = fair_assignment(capacities, jobs, out)
+        assert nxt == out
+
+
+if HAVE_HYPOTHESIS:
+    sids = st.integers(min_value=0, max_value=12)
+    caps_st = st.dictionaries(
+        st.integers(0, 30).map(lambda i: f"s{i:02d}"),
+        st.sampled_from(CAP_CLASSES), max_size=13)
+    jobs_st = st.lists(
+        st.tuples(st.sampled_from(["j0", "j1", "j2", "j3"]),
+                  st.sampled_from([0.5, 1.0, 2.0]),
+                  st.sampled_from([None, 0, 1, 2, 5, 15])),
+        max_size=4, unique_by=lambda t: t[0])
+    seeds_st = st.integers(min_value=0, max_value=2**32 - 1)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(caps=caps_st, jobs=jobs_st, seed=seeds_st)
+    def test_arbiter_laws_hypothesis(caps, jobs, seed):
+        rng = random.Random(seed)
+        job_pool = [j for j, _, _ in jobs] + ["jX"]
+        current = {sid: rng.choice(job_pool)
+                   for sid in caps if rng.random() < 0.5}
+        check_laws(caps, jobs, current, rng)

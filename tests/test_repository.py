@@ -150,3 +150,21 @@ def test_concurrent_pullers_disjoint_tasks():
     for t in threads:
         t.join()
     assert sorted(seen) == list(range(50))  # every task exactly once
+
+
+def test_stale_pending_entry_does_not_re_lease_done_task():
+    """Expiry re-enqueues a task; a late result from the expired holder
+    then completes it (idempotent first-wins).  The dangling pending-
+    queue entry must be skipped — never leased again as a DONE task,
+    which would double-complete it."""
+    repo = TaskRepository(["a", "b"])
+    tid, _ = repo.get_task("s1")
+    assert repo.expire_service("s1") == 1  # tid back in the queue
+    assert repo.complete(tid, "late", "s1") is True  # stale but first
+    nxt = repo.get_task("s2", allow_speculation=False)
+    assert nxt is not None and nxt[0] != tid  # the DONE task stays done
+    assert repo.stats()["leased"] == 1
+    repo.complete(nxt[0], "r", "s2")
+    assert repo.all_done
+    assert repo.stats()["done"] == 2
+    assert repo.results() == ["late", "r"]
