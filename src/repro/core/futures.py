@@ -39,8 +39,8 @@ class FarmExecutor:
                  lookup: LookupService | None = None, lease_s: float = 30.0,
                  speculation: bool = True, max_batch: int = 1,
                  max_inflight: int = 1, adaptive_batching: bool = True,
-                 target_batch_latency_s: float = 0.05, clock=None,
-                 on_lease=None):
+                 target_batch_latency_s: float = 0.05, shards: int = 1,
+                 clock=None, on_lease=None):
         from repro.farm import FarmScheduler
 
         engine_on_lease = None
@@ -52,7 +52,7 @@ class FarmExecutor:
             clock=clock, max_concurrent_jobs=1, lease_s=lease_s,
             speculation=speculation, max_batch=max_batch,
             max_inflight=max_inflight, adaptive_batching=adaptive_batching,
-            target_batch_latency_s=target_batch_latency_s,
+            target_batch_latency_s=target_batch_latency_s, shards=shards,
             on_lease=engine_on_lease)
         # the one job: an open stream (closed only at shutdown), results
         # buffered for the consumer thread, completed records reclaimed —

@@ -73,7 +73,8 @@ class Job:
                  adaptive_batching: bool = True,
                  target_batch_latency_s: float = 0.05,
                  on_lease: Callable | None = None,
-                 reclaim_done: bool = True, collect_results: bool = True):
+                 reclaim_done: bool = True, collect_results: bool = True,
+                 shards: int = 1):
         """``reclaim_done``/``collect_results`` are the two memory knobs
         the single-tenant adapters flip: a farm job (both True is the
         default ``reclaim_done``) drops repository copies and buffers
@@ -105,7 +106,7 @@ class Job:
         self.repository = TaskRepository(
             [], lease_s=lease_s, streaming=True, clock=self.clock,
             on_complete=self._on_complete, on_lease=repo_on_lease,
-            reclaim_done=reclaim_done)
+            reclaim_done=reclaim_done, shards=shards)
 
         self._cond = threading.Condition()
         self._state = JobState.QUEUED
@@ -432,6 +433,11 @@ class Job:
                 "leased": repo["leased"],
                 "reschedules": repo["reschedules"],
                 "per_service": repo["per_service"],
+                "shards": repo["shards"],
+                "lock_wait_s": repo["lock_wait_s"],
+                "lock_hold_s": repo["lock_hold_s"],
+                "lock_contentions": repo["lock_contentions"],
+                "lock_acquisitions": repo["lock_acquisitions"],
             }
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid

@@ -168,3 +168,217 @@ def test_stale_pending_entry_does_not_re_lease_done_task():
     assert repo.all_done
     assert repo.stats()["done"] == 2
     assert repo.results() == ["late", "r"]
+
+
+# ------------------------------------------------------------------ #
+# sharded facade (shards > 1)
+# ------------------------------------------------------------------ #
+
+def test_more_shards_than_tasks():
+    """Degenerate split: most shards own nothing, everything still
+    dispatches exactly once and aggregates correctly."""
+    repo = TaskRepository(list(range(3)), shards=8)
+    assert repo.n_shards == 8
+    got = []
+    while True:
+        g = repo.get_task("s1", timeout=0.1, allow_speculation=False)
+        if g is None:
+            break
+        got.append(g)
+        repo.complete(g[0], g[1] * 2, "s1")
+    assert sorted(t for t, _ in got) == [0, 1, 2]
+    assert repo.all_done
+    assert repo.results() == [0, 2, 4]
+    st = repo.stats()
+    assert st["shards"] == 8 and st["done"] == 3 and st["leased"] == 0
+
+
+def test_sharded_work_steal_drains_sibling_shards():
+    """One service must drain the whole repository even though its home
+    shard owns only a fraction of the tasks."""
+    repo = TaskRepository(list(range(40)), shards=4)
+    seen = set()
+    while True:
+        g = repo.get_task("lone", timeout=0.1, allow_speculation=False)
+        if g is None:
+            break
+        seen.add(g[0])
+        repo.complete(g[0], None, "lone")
+    assert seen == set(range(40))
+
+
+def test_sharded_steal_exactly_once_under_churn_fuzz():
+    """Real threads stealing across shards while a churn thread expires
+    their services: every task completes exactly once, no lease leaks."""
+    import random
+
+    n_tasks, n_workers = 400, 8
+    repo = TaskRepository(list(range(n_tasks)), lease_s=60.0, shards=8)
+    completions: list[int] = []
+    reclock = threading.Lock()
+    stop = threading.Event()
+
+    def worker(sid):
+        while not repo.all_done:
+            got = repo.get_task(sid, timeout=0.05,
+                                allow_speculation=False)
+            if got is None:
+                continue
+            if repo.complete(got[0], got[0], sid):
+                with reclock:
+                    completions.append(got[0])
+
+    def churn():
+        rng = random.Random(7)
+        while not stop.is_set():
+            repo.expire_service(f"w{rng.randrange(n_workers)}")
+            time.sleep(0.002)
+
+    workers = [threading.Thread(target=worker, args=(f"w{i}",))
+               for i in range(n_workers)]
+    churner = threading.Thread(target=churn)
+    churner.start()
+    for t in workers:
+        t.start()
+    for t in workers:
+        t.join()
+    stop.set()
+    churner.join()
+    assert sorted(completions) == list(range(n_tasks))  # exactly once
+    st = repo.stats()
+    assert st["done"] == n_tasks and st["leased"] == 0
+    assert st["pending"] == 0
+
+
+def test_sharded_expire_service_fans_out_leak_free():
+    """A dead service's leases live on several shards; one expire_service
+    call must requeue them all and leak nothing."""
+    repo = TaskRepository(list(range(12)), lease_s=60.0, shards=4)
+    dead = [repo.get_task("dead", allow_speculation=False)[0]
+            for _ in range(6)]
+    alive = [repo.get_task("alive", allow_speculation=False)[0]
+             for _ in range(6)]
+    alive_tid = alive[0]
+    assert len({t % 4 for t in dead}) > 1  # spans shards
+    assert repo.expire_service("dead") == 6
+    st = repo.stats()
+    assert st["leased"] == 6 and st["reschedules"] == 6
+    reclaimed = set()
+    for _ in range(6):
+        g = repo.get_task("rescuer", timeout=0.1, allow_speculation=False)
+        reclaimed.add(g[0])
+    assert reclaimed == set(dead)
+    assert repo.records[alive_tid].state.value == "leased"
+
+
+def test_sharded_cancel_fans_out_leak_free():
+    """cancel() on a sharded repository drops every shard's pending
+    queue and lease table; nothing dispatches afterwards."""
+    repo = TaskRepository(list(range(20)), lease_s=60.0, shards=4)
+    leased = [repo.get_task("s1", allow_speculation=False)
+              for _ in range(5)]
+    assert repo.cancel() == 15  # 20 - 5 leased
+    assert repo.cancel() == 0  # idempotent
+    assert repo.all_done and repo.cancelled
+    st = repo.stats()
+    assert st["pending"] == 0 and st["leased"] == 0
+    assert repo.get_task("s2", timeout=0.05) is None
+    # late results from the cancelled leases are dropped on every shard
+    for tid, payload in leased:
+        assert repo.complete(tid, payload, "s1") is False
+    assert repo.stats()["done"] == 0
+    with pytest.raises(RuntimeError):
+        repo.add_task("late")
+
+
+def test_sharded_batch_fills_across_shards():
+    """A batch may span shards (each slice leased under its own lock);
+    group compatibility holds across the whole batch."""
+    repo = TaskRepository(["a1", "b1", "a2", "b2", "a3", "b3"], shards=3)
+    key = lambda p: p[0]  # noqa: E731
+    batch = repo.get_batch("s1", 6, compatible=key)
+    assert len(batch) == 3 and {p[0] for _, p in batch} == {"a"} or \
+        {p[0] for _, p in batch} == {"b"}
+    batch2 = repo.get_batch("s1", 6, compatible=key)
+    assert len(batch2) == 3
+    assert {p[0] for _, p in batch} != {p[0] for _, p in batch2}
+
+
+def test_sharded_speculation_rescues_sibling_straggler():
+    """Speculative re-execution reaches leases on shards other than the
+    caller's home shard."""
+    import zlib
+
+    repo = TaskRepository(list(range(16)), lease_s=60.0,
+                          speculation_factor=0.0, shards=4)
+    # the age arm needs >= 3 observed durations per shard, and a leaser
+    # drains its home shard first — warm each shard through a service
+    # homed there (same stable crc32 hash the facade uses)
+    homes = {}
+    j = 0
+    while len(homes) < 4:
+        sid = f"warm{j}"
+        homes.setdefault(zlib.crc32(sid.encode()) % 4, sid)
+        j += 1
+    for k in range(4):
+        for _ in range(3):
+            tid, p = repo.get_task(homes[k], allow_speculation=False)
+            assert tid % 4 == k
+            repo.complete(tid, p, homes[k])
+    stuck = {repo.get_task("slow", allow_speculation=False)[0]
+             for _ in range(4)}
+    assert len({t % 4 for t in stuck}) > 1  # stragglers span shards
+    rescued = set()
+    for _ in range(4):
+        g = repo.get_task("fast", timeout=0.5)
+        assert g is not None
+        rescued.add(g[0])
+        repo.complete(g[0], None, "fast")
+    assert rescued == stuck
+    assert repo.stats()["speculative_issues"] == 4
+    assert repo.all_done
+
+
+def test_lock_meters_in_stats():
+    """The contention instrumentation is always on and aggregates across
+    shards (sharded or not)."""
+    for shards in (1, 4):
+        repo = TaskRepository(list(range(10)), shards=shards)
+        while True:
+            g = repo.get_task("s1", timeout=0.05,
+                              allow_speculation=False)
+            if g is None:
+                break
+            repo.complete(g[0], None, "s1")
+        st = repo.stats()
+        assert st["lock_acquisitions"] > 0
+        assert st["lock_hold_s"] > 0.0
+        assert st["lock_wait_s"] >= 0.0
+        assert st["lock_contentions"] >= 0
+        assert st["shards"] == shards
+
+
+def test_sharded_streaming_backpressure_and_wait_all():
+    """The facade-level progress condition: a feeder throttled by
+    wait_unfinished_below and a watcher in wait_all both see sharded
+    completions."""
+    repo = TaskRepository([], streaming=True, shards=4)
+    done = threading.Event()
+
+    def consumer():
+        while not repo.all_done:
+            g = repo.get_task("c", timeout=0.05, allow_speculation=False)
+            if g is not None:
+                repo.complete(g[0], None, "c")
+        done.set()
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    for burst in range(10):
+        assert repo.wait_unfinished_below(8, timeout=10.0)
+        repo.add_tasks(list(range(burst * 4, burst * 4 + 4)))
+    repo.close()
+    assert repo.wait_all(timeout=10.0)
+    t.join(timeout=10.0)
+    assert done.is_set()
+    assert repo.stats()["done"] == 40

@@ -20,6 +20,9 @@ incremental rebalance work must preserve:
   identical objects until a membership event.
 """
 
+import os
+import sys
+
 import pytest
 
 from repro.core import Program
@@ -157,3 +160,59 @@ def test_pool_membership_snapshots_cached_until_change():
             assert pool.ids() is not ids0
             assert "sim0" not in pool.ids()
             assert job.stats()["done"] == 40
+
+
+# ------------------------------------------------------------------ #
+# sharded repository (PR 7)
+# ------------------------------------------------------------------ #
+
+def test_sharded_churn_exactly_once_and_deterministic():
+    """The full engine at shards=4 under the churn schedule: loud and
+    silent deaths, late joins, batched leases, speculation — every task
+    delivered exactly once, and the same seed reproduces the identical
+    lease trace (sharding must not leak nondeterminism into the sim)."""
+
+    def run(seed):
+        faults = _churn_faults(64)
+        with SimCluster(speed_factors=[1.0] * 64, seed=seed,
+                        base_cost_s=0.6 * 64 / 2000, latency_s=0.0,
+                        faults=faults, stall_timeout_s=120.0) as cluster:
+            sched = cluster.make_scheduler(
+                max_batch=8, max_inflight=1, adaptive_batching=False,
+                speculation=True, shards=4)
+            with sched:
+                job = sched.submit(PROG, None, collect_results=True)
+                job.submit_stream((float(i) for i in range(2000)),
+                                  window=1024)
+                got = {}
+                for tid, result in job.as_completed():
+                    assert tid not in got, f"task {tid} delivered twice"
+                    got[tid] = result
+                job.wait(timeout=300)
+                cluster.clock.sleep(5.0)
+                repo_stats = job.repository.stats()
+                trace = tuple(cluster.trace)
+        return got, trace, repo_stats
+
+    got, trace, stats = run(31)
+    assert len(got) == 2000
+    for tid, result in got.items():
+        assert float(result) == tid * 3.0 + 1.0
+    assert stats["shards"] == 4
+    assert stats["done"] == 2000 and stats["leased"] == 0
+    got2, trace2, stats2 = run(31)
+    assert got2 == got and trace2 == trace
+
+
+def test_shards_one_trace_identical_to_golden():
+    """shards=1 IS the pre-sharding repository: the golden churny sim
+    scenario's lease trace must match the hash pinned on the single-lock
+    engine, byte for byte."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.contention import (GOLDEN_EVENTS, GOLDEN_SHA256,
+                                       golden_run)
+
+    got, digest, n_events = golden_run()
+    assert len(got) == 800
+    assert (digest, n_events) == (GOLDEN_SHA256, GOLDEN_EVENTS), (
+        "shards=1 sim lease trace diverged from the pre-sharding engine")
