@@ -65,6 +65,19 @@ def run_contention(args) -> None:
               "--out", args.contention_out])
 
 
+def run_wire(args) -> None:
+    """The transport gate: µs/task and socket payload bytes for inproc vs
+    shm vs proc vs tcp on array payloads; writes ``BENCH_wire.json`` and
+    fails unless shm beats proc on both bytes and the speedup floor.  CI
+    runs a reduced configuration; the committed figures come from the
+    module's defaults (``benchmarks/wire.py``)."""
+    from benchmarks import wire as mod
+
+    mod.main(["--tasks", str(args.wire_tasks),
+              "--repeats", str(args.wire_repeats),
+              "--out", args.wire_out])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--compare-batched", action="store_true",
@@ -93,6 +106,13 @@ def main() -> None:
     ap.add_argument("--contention-per-service", type=int, default=128)
     ap.add_argument("--contention-repeats", type=int, default=2)
     ap.add_argument("--contention-out", default="BENCH_contention.json")
+    ap.add_argument("--wire", action="store_true",
+                    help="only run the transport wire gate (inproc/shm/"
+                         "proc/tcp µs-per-task + socket payload bytes; "
+                         "writes BENCH_wire.json)")
+    ap.add_argument("--wire-tasks", type=int, default=100)
+    ap.add_argument("--wire-repeats", type=int, default=2)
+    ap.add_argument("--wire-out", default="BENCH_wire.json")
     ap.add_argument("--services", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-inflight", type=int, default=2)
@@ -113,16 +133,19 @@ def main() -> None:
     if args.contention:
         run_contention(args)
         return
+    if args.wire:
+        run_wire(args)
+        return
 
     from benchmarks import (contention, elasticity, engine_overhead,
                             farm_scalability, fault_tolerance,
                             heterogeneous_now, kernels, load_balance,
-                            multi_tenant, normal_form, scale)
+                            multi_tenant, normal_form, scale, wire)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
                 elasticity, heterogeneous_now, multi_tenant, engine_overhead,
-                scale, contention, kernels):
+                scale, contention, wire, kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
 

@@ -1,0 +1,189 @@
+"""Wire microbenchmark: what each transport pays per dispatched task.
+
+One identity task (``jit=False`` — no compute, pure dispatch), one array
+payload, four backends:
+
+- **inproc** — the zero-copy live-object baseline;
+- **shm**    — proc's socket protocol, array leaves over a shared-memory
+  ring (descriptors on the socket);
+- **proc**   — the full serialize → socket → deserialize round-trip;
+- **tcp**    — proc's data plane behind the network LookupServer (same
+  wire cost, plus whatever the discovery plane adds at setup).
+
+Two currencies are reported per backend: **µs/task** (min over repeated
+runs; spikes inflate means, never minima) and **payload bytes that
+crossed the socket per task** (both directions; for shm the ring bytes
+are reported separately — they are memcpys, not socket copies).
+
+The acceptance gates (``pass`` in ``BENCH_wire.json``):
+
+- shm moves strictly fewer payload bytes over the socket than proc;
+- proc's µs/task is ≥ ``--speedup-floor`` (default 2×) shm's on array
+  payloads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import Program, Service, resolve_handle  # noqa: E402
+
+#: dispatch only — the benchmark measures the transport, not the task
+PROGRAM = Program(lambda x: x, jit=False, name="ident")
+
+
+def _payload(n_floats: int) -> np.ndarray:
+    return np.arange(n_floats, dtype=np.float32)
+
+
+def _time_executes(handle, payload: np.ndarray, n_tasks: int,
+                   repeats: int) -> tuple[float, dict]:
+    """min µs/task over ``repeats`` runs + per-task byte counters."""
+    handle.prepare(PROGRAM)
+    out = handle.execute(PROGRAM, payload)  # warm-up + correctness
+    np.testing.assert_array_equal(np.asarray(out), payload)
+
+    best_s = float("inf")
+    b_out0 = getattr(handle, "payload_bytes_out", 0)
+    b_in0 = getattr(handle, "payload_bytes_in", 0)
+    ring0 = getattr(handle, "shm_bytes_out", 0)
+    done = 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n_tasks):
+            handle.execute(PROGRAM, payload)
+        best_s = min(best_s, time.perf_counter() - t0)
+        done += n_tasks
+    counters = {
+        "socket_payload_bytes_per_task":
+            (getattr(handle, "payload_bytes_out", 0) - b_out0
+             + getattr(handle, "payload_bytes_in", 0) - b_in0) / done,
+        "ring_bytes_per_task":
+            (getattr(handle, "shm_bytes_out", 0) - ring0) / done,
+    }
+    return best_s / n_tasks * 1e6, counters
+
+
+def bench_inproc(payload, n_tasks, repeats):
+    svc = Service(None, service_id="wire-inproc")
+    handle = resolve_handle(svc.descriptor())
+    us, counters = _time_executes(handle, payload, n_tasks, repeats)
+    return us, counters
+
+
+def bench_now(payload, n_tasks, repeats, transport):
+    from repro.launch.now import NowPool
+
+    with NowPool(1, service_prefix=f"wire-{transport}",
+                 transport=transport) as pool:
+        handle = resolve_handle(pool.workers[0].descriptor)
+        try:
+            return _time_executes(handle, payload, n_tasks, repeats)
+        finally:
+            handle.close()
+
+
+def bench_tcp(payload, n_tasks, repeats):
+    from repro.launch.tcp import TcpPool
+
+    with TcpPool(1, service_prefix="wire-tcp") as pool:
+        (desc,) = pool.lookup.query()
+        handle = resolve_handle(desc)
+        try:
+            return _time_executes(handle, payload, n_tasks, repeats)
+        finally:
+            handle.close()
+
+
+def bench_wire(*, n_tasks: int = 200, payload_floats: int = 262144,
+               repeats: int = 3, speedup_floor: float = 2.0) -> dict:
+    payload = _payload(payload_floats)
+    backends: dict[str, dict] = {}
+    for name, runner in (
+            ("inproc", lambda: bench_inproc(payload, n_tasks, repeats)),
+            ("shm", lambda: bench_now(payload, n_tasks, repeats, "shm")),
+            ("proc", lambda: bench_now(payload, n_tasks, repeats, "proc")),
+            ("tcp", lambda: bench_tcp(payload, n_tasks, repeats))):
+        us, counters = runner()
+        backends[name] = {"us_per_task": us, **counters}
+
+    shm_bytes = backends["shm"]["socket_payload_bytes_per_task"]
+    proc_bytes = backends["proc"]["socket_payload_bytes_per_task"]
+    speedup = backends["proc"]["us_per_task"] / backends["shm"]["us_per_task"]
+    gates = {
+        "shm_socket_bytes_lt_proc": shm_bytes < proc_bytes,
+        "proc_over_shm_speedup": speedup,
+        "speedup_floor": speedup_floor,
+        "speedup_ok": speedup >= speedup_floor,
+    }
+    return {
+        "benchmark": "wire",
+        "config": {"n_tasks": n_tasks, "payload_floats": payload_floats,
+                   "payload_bytes": int(payload.nbytes),
+                   "repeats": repeats},
+        "backends": backends,
+        "gates": gates,
+        "pass": gates["shm_socket_bytes_lt_proc"] and gates["speedup_ok"],
+    }
+
+
+def bench() -> list[tuple[str, float, str]]:
+    """Harness entry (``benchmarks/run.py`` table)."""
+    r = bench_wire(n_tasks=60, repeats=2)
+    rows = []
+    for name, b in r["backends"].items():
+        rows.append((f"wire/{name}", b["us_per_task"],
+                     f"socket_B/task={b['socket_payload_bytes_per_task']:.0f}"))
+    rows.append(("wire/proc_over_shm", r["gates"]["proc_over_shm_speedup"],
+                 f"pass={r['pass']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tasks", type=int, default=200)
+    ap.add_argument("--payload-floats", type=int, default=262144,
+                    help="float32 elements per payload (default 1 MiB)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--speedup-floor", type=float, default=2.0,
+                    help="minimum proc/shm µs-per-task ratio")
+    ap.add_argument("--out", default=None,
+                    help="write results to this JSON file "
+                         "(e.g. BENCH_wire.json)")
+    args = ap.parse_args(argv)
+
+    result = bench_wire(n_tasks=args.tasks,
+                        payload_floats=args.payload_floats,
+                        repeats=args.repeats,
+                        speedup_floor=args.speedup_floor)
+    for name, b in result["backends"].items():
+        print(f"wire/{name},{b['us_per_task']:.1f},"
+              f"socket_B/task={b['socket_payload_bytes_per_task']:.0f} "
+              f"ring_B/task={b['ring_bytes_per_task']:.0f}")
+    g = result["gates"]
+    print(f"wire/proc_over_shm,{g['proc_over_shm_speedup']:.2f},"
+          f"floor={g['speedup_floor']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {args.out}")
+    assert result["pass"], (
+        f"wire gate failed: shm socket bytes "
+        f"{result['backends']['shm']['socket_payload_bytes_per_task']:.0f} "
+        f"vs proc "
+        f"{result['backends']['proc']['socket_payload_bytes_per_task']:.0f}; "
+        f"proc/shm speedup {g['proc_over_shm_speedup']:.2f}x "
+        f"(floor {g['speedup_floor']}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

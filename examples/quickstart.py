@@ -3,11 +3,17 @@ three front-ends of the one dispatch engine behind it.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --transport=proc
+    PYTHONPATH=src python examples/quickstart.py --transport=shm
+    PYTHONPATH=src python examples/quickstart.py --transport=tcp
 
 ``--transport=inproc`` (default) stands the cluster up as objects in this
 process; ``--transport=proc`` spawns one OS worker process per service
 (the NoW deployment) — same client code, same two lines, the endpoint
 addresses in the lookup are just ``proc://`` instead of ``inproc://``.
+``--transport=shm`` is proc with payloads over a shared-memory ring (the
+same-host fast path); ``--transport=tcp`` runs discovery itself over the
+network (a LookupServer + self-registering workers — point other hosts'
+workers at its address to grow the farm).
 
 Every idiom below (blocking ``BasicClient``, futures ``FarmExecutor``,
 shared multi-tenant ``FarmScheduler``) is an adapter over the same
@@ -23,17 +29,24 @@ from repro.core import (BasicClient, Farm, FarmExecutor, LookupService, Pipe,
 from repro.farm import FarmScheduler
 
 ap = argparse.ArgumentParser(description=__doc__)
-ap.add_argument("--transport", choices=("inproc", "proc"), default="inproc")
+ap.add_argument("--transport", choices=("inproc", "proc", "shm", "tcp"),
+                default="inproc")
 args = ap.parse_args()
 
 # --- stand up a tiny cluster (normally: one Service per pod/workstation) --
-lookup = LookupService()
 pool = None
-if args.transport == "proc":
+if args.transport in ("proc", "shm"):
     from repro.launch.now import NowPool
 
-    pool = NowPool(3, lookup, service_prefix="qs")
+    lookup = LookupService()
+    pool = NowPool(3, lookup, service_prefix="qs", transport=args.transport)
+elif args.transport == "tcp":
+    from repro.launch.tcp import TcpPool
+
+    pool = TcpPool(3, service_prefix="qs")
+    lookup = pool.lookup  # a RemoteLookup: discovery over the network
 else:
+    lookup = LookupService()
     for _ in range(3):
         Service(lookup).start()
 

@@ -78,13 +78,45 @@ class LookupService:
         # (on_register, on_unregister-or-None) pairs
         self._observers: list[tuple[Callable[[ServiceDescriptor], None],
                                     Callable[[str], None] | None]] = []
+        #: duplicate registers absorbed without re-notifying observers — a
+        #: flaky worker re-registering before its unregister lands
+        self.re_registrations = 0
 
     # -- service side ------------------------------------------------ #
     def register(self, descriptor: ServiceDescriptor) -> None:
+        """Register (or refresh) a descriptor.
+
+        A re-register of an already-registered ``service_id`` with the
+        *same* endpoint is absorbed silently: the stored descriptor is
+        refreshed but ``on_register`` observers do NOT fire again — a
+        flaky worker re-registering before its unregister lands must not
+        make recruiters double-recruit the same endpoint.  A re-register
+        with a *different* endpoint is a re-homed service (e.g. a worker
+        restarted on a new port): observers see a paired
+        ``on_unregister(old)`` then ``on_register(new)``.
+        """
         with self._lock:
+            prev = self._services.get(descriptor.service_id)
             self._services[descriptor.service_id] = descriptor
-            observers = [cb for cb, _ in self._observers]
+            if prev is not None and prev.endpoint == descriptor.endpoint:
+                self.re_registrations += 1
+                observers: list = []
+                unregister_first: list = []
+            elif prev is not None:  # re-homed: new endpoint for a known id
+                observers = [cb for cb, _ in self._observers]
+                unregister_first = [uncb for _, uncb in self._observers
+                                    if uncb is not None]
+            else:
+                observers = [cb for cb, _ in self._observers]
+                unregister_first = []
             self._clock.cond_notify_all(self._lock)
+        for uncb in unregister_first:  # retire the stale endpoint first
+            try:
+                uncb(descriptor.service_id)
+            except Exception:
+                logger.exception(
+                    "lookup observer %r failed while handling re-homing "
+                    "of %s", uncb, descriptor.service_id)
         for cb in observers:  # async recruitment path (publish/subscribe)
             try:
                 cb(descriptor)

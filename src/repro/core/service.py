@@ -43,8 +43,14 @@ class Service:
     def __init__(self, lookup: LookupService | None, *, devices=None,
                  service_id: str | None = None, speed_factor: float = 1.0,
                  capabilities: dict | None = None,
-                 task_delay_s: float = 0.0):
+                 task_delay_s: float = 0.0,
+                 advertise: str | None = None):
         self.lookup = lookup
+        # Registered endpoint address override: a worker serving sockets
+        # advertises its network address ("tcp://host:port") instead of
+        # the in-process token, so recruit/release re-registration through
+        # a RemoteLookup lands the *reachable* endpoint.
+        self._advertise = advertise
         self.devices = list(devices) if devices else [jax.devices()[0]]
         self.service_id = service_id or new_service_id()
         self.speed_factor = speed_factor
@@ -84,7 +90,11 @@ class Service:
         """Endpoint is an *address*, resolved through the transport
         registry at recruitment — never the live object.  ``keepalive``
         pins this service while it sits in a lookup (the endpoint table is
-        weak; see ``transport/inproc.py``)."""
+        weak; see ``transport/inproc.py``); an advertised network address
+        needs no pinning (the worker process itself is the lifetime)."""
+        if self._advertise is not None:
+            return ServiceDescriptor(self.service_id, self._advertise,
+                                     dict(self.capabilities))
         return ServiceDescriptor(self.service_id,
                                  f"inproc://{self._endpoint_token}",
                                  dict(self.capabilities),

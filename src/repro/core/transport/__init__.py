@@ -9,6 +9,13 @@ registers the two built-in backends:
 - ``proc://``   — one OS process per service, length-prefixed
   msgpack/pickle frames over TCP (workers spawned by
   :class:`repro.launch.now.NowPool`);
+- ``shm://``    — proc's socket protocol, but pytree payloads ride a
+  same-host ``multiprocessing.shared_memory`` ring (only descriptors
+  cross the frame — the zero-copy fast path for cheap tasks);
+- ``tcp://``    — real multi-host NoW: workers register with a
+  network-reachable :class:`~repro.core.transport.tcp.LookupServer`
+  through a :class:`~repro.core.transport.tcp.RemoteLookup` proxy
+  (workers spawned by :class:`repro.launch.tcp.TcpPool`);
 - ``sim://``    — deterministic simulated services on a virtual clock
   (clusters stood up by :class:`repro.sim.SimCluster` /
   :class:`repro.launch.sim.SimPool`), for reproducible scheduling and
@@ -19,6 +26,9 @@ from .base import (LivenessMonitor, ServiceHandle, Transport,  # noqa: F401
                    get_transport, register_transport, resolve_handle)
 from .inproc import InProcessTransport, InProcHandle  # noqa: F401
 from .proc import ProcHandle, ProcTransport, ServiceWorker  # noqa: F401
+from .shm import ShmHandle, ShmRing, ShmTransport  # noqa: F401
 from .sim import SimHandle, SimTransport  # noqa: F401
+from .tcp import (LookupServer, RemoteLookup, TcpHandle,  # noqa: F401
+                  TcpTransport)
 from .wire import (dump_program, dump_pytree, load_program,  # noqa: F401
                    load_pytree, recv_frame, send_frame)

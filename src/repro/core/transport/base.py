@@ -205,8 +205,14 @@ class LivenessMonitor:
                 if entry is None:
                     continue
                 self.deaths += 1
-                _, on_dead = entry
+                handle, on_dead = entry
                 try:
                     on_dead(sid)
+                except Exception:
+                    pass
+                # the handle is never coming back: close it (idempotent by
+                # contract) or its socket fd leaks on every declared death
+                try:
+                    handle.close()
                 except Exception:
                     pass

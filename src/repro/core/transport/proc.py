@@ -50,22 +50,38 @@ class ProcHandle(ServiceHandle):
 
     def __init__(self, address: str, *, descriptor=None, lookup=None):
         host, _, port = address.rpartition(":")
+        self._addr = (host, int(port))
         self._descriptor = descriptor
         self._lookup = lookup
-        self._sock = socket.create_connection((host, int(port)),
+        self._sock = socket.create_connection(self._addr,
                                               timeout=CONNECT_TIMEOUT_S)
         self._sock.settimeout(None)  # requests block for as long as tasks run
         self._lock = threading.Lock()
         self._prepared: set[int] = set()
         self._cache_hits = 0
         self._cache_misses = 0
+        # payload bytes that actually crossed the socket (the wire
+        # benchmark's currency; shm descriptors count, ring bytes do not)
+        self.payload_bytes_out = 0
+        self.payload_bytes_in = 0
+        self.reconnects = 0
         try:
-            hello = self._request({"op": "hello"})
+            hello = self._request(self._hello_msg())
         except ServiceFailure:
             self.close()
             raise
         self.service_id = hello["service_id"]
         self.capabilities = dict(hello["capabilities"])
+
+    # payload codec seam: ShmHandle swaps the dump side for the ring
+    def _hello_msg(self) -> dict:
+        return {"op": "hello"}
+
+    def _dump(self, tree) -> bytes:
+        return dump_pytree(tree)
+
+    def _load(self, data: bytes):
+        return load_pytree(data)
 
     # ------------------------------------------------------------- #
     def _request(self, msg: dict) -> dict:
@@ -123,9 +139,12 @@ class ProcHandle(ServiceHandle):
 
     def execute(self, program, payload) -> Any:
         self.prepare(program)
+        data = self._dump(payload)
+        self.payload_bytes_out += len(data)
         reply = self._request({"op": "execute", "uid": program.uid,
-                               "payload": dump_pytree(payload)})
-        return load_pytree(reply["result"])
+                               "payload": data})
+        self.payload_bytes_in += len(reply["result"])
+        return self._load(reply["result"])
 
     def execute_batch(self, program, payloads: list, *, block: bool = True,
                       pad_to: int | None = None) -> list:
@@ -133,10 +152,43 @@ class ProcHandle(ServiceHandle):
         # batch is always materialized — that round-trip cost is the
         # honest price the in-process backend hides.
         self.prepare(program)
+        data = self._dump(list(payloads))
+        self.payload_bytes_out += len(data)
         reply = self._request({"op": "execute_batch", "uid": program.uid,
-                               "payloads": dump_pytree(list(payloads)),
+                               "payloads": data,
                                "pad_to": pad_to})
-        return load_pytree(reply["results"])
+        self.payload_bytes_in += len(reply["results"])
+        return self._load(reply["results"])
+
+    def reconnect(self) -> None:
+        """Tear down and re-dial the connection (tcp:// fault recovery).
+
+        The worker's program table is *per connection*, so `_prepared`
+        must be invalidated — programs re-ship on first use — or every
+        post-reconnect execute would die with "program not prepared".
+        Raises ServiceFailure if the endpoint is gone or now hosts a
+        different service."""
+        with self._lock:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            try:
+                self._sock = socket.create_connection(
+                    self._addr, timeout=CONNECT_TIMEOUT_S)
+                self._sock.settimeout(None)
+            except OSError as e:
+                raise ServiceFailure(
+                    f"service {getattr(self, 'service_id', '?')} "
+                    f"unreachable on reconnect: {e}") from e
+            self._prepared.clear()
+            self.reconnects += 1
+            hello = self._request_locked(self._hello_msg())
+        if hello["service_id"] != self.service_id:
+            self.close()
+            raise ServiceFailure(
+                f"endpoint {self._addr} now hosts "
+                f"{hello['service_id']!r}, expected {self.service_id!r}")
 
     def ping(self, timeout_s: float = 1.0) -> bool:
         if not self._lock.acquire(blocking=False):
@@ -218,6 +270,7 @@ class ServiceWorker:
 
     def _serve_conn(self, conn: socket.socket) -> None:
         programs: dict[int, Any] = {}  # client program uid -> local Program
+        state = {"reply_ring": None}  # per-connection shm negotiation
         recruited_here = False
         try:
             while True:
@@ -229,7 +282,7 @@ class ServiceWorker:
                     break
                 op = msg.get("op")
                 try:
-                    reply = self._dispatch(op, msg, programs)
+                    reply = self._dispatch(op, msg, programs, state)
                     if op == "recruit":
                         recruited_here = bool(reply.get("ok"))
                     elif op == "release":
@@ -252,16 +305,38 @@ class ServiceWorker:
                 conn.close()
             except OSError:
                 pass
+            if state["reply_ring"] is not None:
+                state["reply_ring"].close(unlink=True)
             if recruited_here:
                 # client vanished mid-recruitment: free the worker for the
                 # next client instead of wedging it forever
                 self.service.release()
 
-    def _dispatch(self, op: str, msg: dict, programs: dict) -> dict:
+    @staticmethod
+    def _dump_result(tree, state: dict) -> bytes:
+        ring = state["reply_ring"]
+        if ring is not None:
+            from .shm import dump_pytree_shm
+            return dump_pytree_shm(tree, ring)
+        return dump_pytree(tree)
+
+    def _dispatch(self, op: str, msg: dict, programs: dict,
+                  state: dict) -> dict:
         service = self.service
         if op == "hello":
-            return {"op": "result", "service_id": service.service_id,
-                    "capabilities": dict(service.capabilities)}
+            reply = {"op": "result", "service_id": service.service_id,
+                     "capabilities": dict(service.capabilities)}
+            if msg.get("shm"):
+                # shm:// negotiation: results ride a per-connection reply
+                # ring instead of the frame (requests need no negotiation —
+                # their descriptors resolve transparently at unpickle)
+                from .shm import DEFAULT_RING_BYTES, ShmRing
+                if state["reply_ring"] is not None:
+                    state["reply_ring"].close(unlink=True)
+                state["reply_ring"] = ShmRing(
+                    int(msg.get("shm_bytes", DEFAULT_RING_BYTES)))
+                reply["shm_ring"] = state["reply_ring"].name
+            return reply
         if op == "recruit":
             return {"op": "result",
                     "ok": service.recruit(msg["client_id"])}
@@ -277,7 +352,8 @@ class ServiceWorker:
         if op == "execute":
             program = self._program(programs, msg)
             result = service.execute(program, load_pytree(msg["payload"]))
-            return {"op": "result", "result": dump_pytree(result),
+            return {"op": "result",
+                    "result": self._dump_result(result, state),
                     "cache_hits": service.cache_hits,
                     "cache_misses": service.cache_misses}
         if op == "execute_batch":
@@ -285,7 +361,8 @@ class ServiceWorker:
             results = service.execute_batch(
                 program, load_pytree(msg["payloads"]), block=True,
                 pad_to=msg.get("pad_to"))
-            return {"op": "result", "results": dump_pytree(results),
+            return {"op": "result",
+                    "results": self._dump_result(results, state),
                     "cache_hits": service.cache_hits,
                     "cache_misses": service.cache_misses}
         if op == "ping":

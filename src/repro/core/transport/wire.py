@@ -54,15 +54,31 @@ def pack_envelope(msg: dict) -> bytes:
 
 
 def unpack_envelope(data: bytes) -> dict:
+    if not data:
+        # a zero-length frame is a framing bug on the peer, not an unknown
+        # tag: say so (the b'' "tag" error sent people hunting a codec
+        # problem that never existed)
+        raise TransportError("zero-length frame")
     tag, body = data[:1], data[1:]
     if tag == b"M":
         if _msgpack is None:
             raise TransportError("peer sent a msgpack frame but msgpack "
                                  "is not installed here")
-        return _msgpack.unpackb(body, raw=False)
-    if tag == b"P":
-        return pickle.loads(body)
-    raise TransportError(f"unknown envelope tag {tag!r}")
+        try:
+            msg = _msgpack.unpackb(body, raw=False)
+        except Exception as e:
+            raise TransportError(f"corrupt msgpack envelope: {e}") from e
+    elif tag == b"P":
+        try:
+            msg = pickle.loads(body)
+        except Exception as e:
+            raise TransportError(f"corrupt pickle envelope: {e}") from e
+    else:
+        raise TransportError(f"unknown envelope tag {tag!r}")
+    if not isinstance(msg, dict):
+        raise TransportError(
+            f"envelope decoded to {type(msg).__name__}, expected dict")
+    return msg
 
 
 def send_frame(sock: socket.socket, msg: dict) -> None:
@@ -93,11 +109,15 @@ def recv_frame(sock: socket.socket) -> dict | None:
     if header == b"":
         raise TransportError("connection died mid-frame header")
     (n,) = _LEN.unpack(header)
+    if n == 0:
+        # the `if not data and n` guard below would otherwise wave an
+        # empty body through to unpack_envelope(b"")
+        raise TransportError("zero-length frame")
     if n > MAX_FRAME_BYTES:
         raise TransportError(f"peer announced a {n}-byte frame (cap "
                              f"{MAX_FRAME_BYTES})")
     data = _recv_exact(sock, n)
-    if not data and n:
+    if not data:
         raise TransportError("connection died mid-frame body")
     return unpack_envelope(data)
 

@@ -41,11 +41,12 @@ class NowWorker:
     service_id: str
     proc: subprocess.Popen
     port: int
+    scheme: str = "proc"
     descriptor: object = field(repr=False, default=None)
 
     @property
     def address(self) -> str:
-        return f"proc://127.0.0.1:{self.port}"
+        return f"{self.scheme}://127.0.0.1:{self.port}"
 
     @property
     def alive(self) -> bool:
@@ -59,20 +60,26 @@ class NowPool:
                  task_delay_s: float = 0.0,
                  speed_factors: Sequence[float] | None = None,
                  service_prefix: str = "now",
-                 startup_timeout_s: float = 120.0):
+                 startup_timeout_s: float = 120.0,
+                 transport: str = "proc"):
         from repro.core.discovery import ServiceDescriptor
 
+        if transport not in ("proc", "shm"):
+            raise ValueError(f"NowPool transport must be 'proc' or 'shm', "
+                             f"got {transport!r}")
         self.lookup = lookup
+        self.transport = transport
         self.workers: list[NowWorker] = []
         try:
             for i in range(n_workers):
                 sf = (speed_factors[i] if speed_factors else 1.0)
                 worker = self._spawn(f"{service_prefix}{i}", i,
                                      task_delay_s, sf, startup_timeout_s)
+                worker.scheme = transport
                 worker.descriptor = ServiceDescriptor(
                     worker.service_id, worker.address,
                     {"n_devices": 1, "speed_factor": sf,
-                     "transport": "proc", "pid": worker.proc.pid})
+                     "transport": transport, "pid": worker.proc.pid})
                 self.workers.append(worker)
         except Exception:
             self.shutdown()
@@ -94,6 +101,7 @@ class NowPool:
                "--service-id", service_id,
                "--task-delay-s", str(task_delay_s),
                "--speed-factor", str(speed_factor),
+               "--transport", self.transport,
                "--parent-pid", str(os.getpid())]
         proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, env=env,
                                 text=True)
@@ -211,7 +219,8 @@ def worker_main(args: argparse.Namespace) -> int:
     service = Service(None, service_id=args.service_id,
                       task_delay_s=args.task_delay_s,
                       speed_factor=args.speed_factor,
-                      capabilities={"transport": "proc", "pid": os.getpid()})
+                      capabilities={"transport": args.transport,
+                                    "pid": os.getpid()})
     ServiceWorker(service, srv).serve_forever()
     return 0
 
@@ -228,6 +237,10 @@ def main(argv=None) -> int:
                     help="TCP port (0 = ephemeral, printed on stdout)")
     ap.add_argument("--task-delay-s", type=float, default=0.0)
     ap.add_argument("--speed-factor", type=float, default=1.0)
+    ap.add_argument("--transport", default="proc",
+                    help="advertised payload path ('proc' or 'shm'); the "
+                         "worker itself negotiates shm per connection at "
+                         "hello, so this only labels capabilities")
     ap.add_argument("--parent-pid", type=int, default=0)
     args = ap.parse_args(argv)
     if not args.worker:

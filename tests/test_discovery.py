@@ -114,6 +114,42 @@ def test_unsubscribe_during_register_callback(caplog):
     assert [s for s in seen if s[1] == "b"] == []
 
 
+def test_duplicate_registration_notifies_observers_once():
+    """Satellite regression: re-registering the same service_id+endpoint
+    (a flaky worker's keepalive replay, a subscription resync) silently
+    overwrote the descriptor AND re-fired on_register — elastic
+    recruiters saw phantom joins for services they already held.  Now
+    the refresh is absorbed: descriptor updated, observers quiet."""
+    lk = LookupService()
+    joined, left = [], []
+    lk.subscribe(lambda d: joined.append(d.service_id),
+                 on_unregister=left.append)
+    lk.register(ServiceDescriptor("w1", "tcp://host:1", {"rev": 1}))
+    lk.register(ServiceDescriptor("w1", "tcp://host:1", {"rev": 2}))
+    assert joined == ["w1"] and left == []
+    assert lk.re_registrations == 1
+    assert len(lk) == 1
+    (got,) = lk.query()
+    assert got.capabilities["rev"] == 2  # the refresh itself still lands
+
+
+def test_rehomed_registration_fires_paired_unregister_then_register():
+    """Same service_id at a NEW endpoint is not a duplicate — it is a
+    worker restarted on another port.  Observers must see the old
+    endpoint retire before the new one joins, in that order."""
+    lk = LookupService()
+    events = []
+    lk.subscribe(lambda d: events.append(("join", d.endpoint)),
+                 on_unregister=lambda sid: events.append(("leave", sid)))
+    lk.register(ServiceDescriptor("w1", "tcp://host:1"))
+    lk.register(ServiceDescriptor("w1", "tcp://host:2"))
+    assert events == [("join", "tcp://host:1"), ("leave", "w1"),
+                      ("join", "tcp://host:2")]
+    assert lk.re_registrations == 0
+    (got,) = lk.query()
+    assert got.endpoint == "tcp://host:2"
+
+
 def test_killed_service_cannot_be_recruited():
     lk = LookupService()
     svc = Service(lk)

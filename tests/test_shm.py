@@ -1,0 +1,173 @@
+"""shm:// — the same-host zero-copy fast path.
+
+The contract under test: results and payloads are bit-identical to the
+``proc://`` path, but array leaves cross via a shared-memory ring — the
+socket carries descriptors, not data.  Degradation is graceful (a leaf
+that does not fit the ring stays inline) and the ring is reusable
+forever because a handle serializes its requests.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BasicClient, Farm, LookupService, Program, Seq,
+                        interpret, resolve_handle)
+from repro.core.transport.shm import (MIN_SHM_BYTES, ShmHandle, ShmRing,
+                                      detach_all, dump_pytree_shm)
+from repro.core.transport.wire import load_pytree
+from repro.launch.now import NowPool
+
+
+# --------------------------------------------------------------------- #
+# the ring itself (no workers)
+# --------------------------------------------------------------------- #
+def test_ring_roundtrip_descriptors_not_payload():
+    ring = ShmRing(1 << 16)  # 64 KiB
+    try:
+        big = np.arange(4096, dtype=np.float32)  # 16 KiB: rides the ring
+        small = np.arange(4, dtype=np.float32)   # < MIN_SHM_BYTES: inline
+        assert small.nbytes < MIN_SHM_BYTES
+        data = dump_pytree_shm({"big": big, "small": small}, ring)
+        assert len(data) < big.nbytes  # the pickle holds a descriptor
+        assert ring.bytes_written == big.nbytes
+        out = load_pytree(data)  # plain loader: descriptors resolve
+        np.testing.assert_array_equal(out["big"], big)
+        np.testing.assert_array_equal(out["small"], small)
+    finally:
+        ring.close(unlink=True)
+        detach_all()
+
+
+def test_ring_overflow_falls_back_inline_and_stays_correct():
+    ring = ShmRing(1 << 12)  # 4 KiB ring
+    try:
+        huge = np.arange(1 << 13, dtype=np.float32)  # 32 KiB > ring
+        out = load_pytree(dump_pytree_shm([huge], ring))
+        np.testing.assert_array_equal(out[0], huge)
+        assert ring.inline_fallbacks == 1
+        assert ring.bytes_written == 0
+    finally:
+        ring.close(unlink=True)
+        detach_all()
+
+
+def test_ring_reuse_and_wraparound_stay_correct():
+    """One outstanding message at a time (the handle's request lock) is
+    what makes bump-allocation reuse safe; wrapping the ring many times
+    must never corrupt the message being read."""
+    ring = ShmRing(1 << 14)  # 16 KiB: wraps every ~4 messages
+    try:
+        for i in range(100):
+            arr = np.full(1024, float(i), dtype=np.float32)  # 4 KiB
+            out = load_pytree(dump_pytree_shm([arr], ring))
+            np.testing.assert_array_equal(out[0], arr)
+    finally:
+        ring.close(unlink=True)
+        detach_all()
+
+
+# --------------------------------------------------------------------- #
+# the shm:// backend end to end
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def shm_cluster():
+    lookup = LookupService()
+    with NowPool(2, lookup, service_prefix="sw", transport="shm") as pool:
+        yield lookup, pool
+    detach_all()
+
+
+def test_shm_farm_matches_interpret(shm_cluster):
+    lookup, _ = shm_cluster
+    prog = Program(lambda x: x * 2.0 + 1.0, name="aff")
+    tasks = [jnp.full((2048,), float(i)) for i in range(8)]  # 8 KiB each
+    reference = interpret(Farm(Seq(prog)), tasks)
+    for kwargs in ({}, {"max_batch": 4, "max_inflight": 2}):
+        out: list = []
+        BasicClient(prog, None, tasks, out, lookup=lookup,
+                    speculation=False, **kwargs).compute(timeout=120)
+        for got, want in zip(out, reference):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert lookup.wait_for_services(2, timeout_s=10.0)
+
+
+def test_shm_payload_rides_the_ring_not_the_socket(shm_cluster):
+    """The acceptance gate in miniature: array bytes cross via the ring
+    (both directions), the socket carries only descriptors."""
+    _, pool = shm_cluster
+    handle = resolve_handle(pool.workers[0].descriptor)
+    assert isinstance(handle, ShmHandle)
+    try:
+        prog = Program(lambda x: x + 1.0, name="inc")
+        payload = jnp.arange(65536, dtype=jnp.float32)  # 256 KiB
+        nbytes = 65536 * 4
+        result = handle.execute(prog, payload)
+        np.testing.assert_allclose(
+            np.asarray(result), np.arange(65536, dtype=np.float32) + 1.0)
+        assert handle.shm_bytes_out >= nbytes       # request rode the ring
+        assert handle.payload_bytes_out < nbytes // 100  # socket: descriptor
+        assert handle.payload_bytes_in < nbytes // 100   # reply: descriptor
+        # batched path too
+        results = handle.execute_batch(prog, [payload, payload])
+        assert len(results) == 2
+        np.testing.assert_allclose(
+            np.asarray(results[1]), np.arange(65536, dtype=np.float32) + 1.0)
+        assert handle.payload_bytes_in < nbytes // 10
+    finally:
+        handle.close()
+        detach_all()
+
+
+def test_shm_oversized_payload_degrades_to_inline(shm_cluster):
+    """A payload bigger than the negotiated ring must still compute —
+    inline in the frame, exactly like proc:// — never corrupt or fail."""
+    _, pool = shm_cluster
+    address = pool.workers[1].descriptor.endpoint.split("://", 1)[1]
+    handle = ShmHandle(address, ring_bytes=1 << 12)  # 4 KiB ring
+    try:
+        prog = Program(lambda x: x * 3.0, name="tri")
+        payload = jnp.arange(8192, dtype=jnp.float32)  # 32 KiB > ring
+        result = handle.execute(prog, payload)
+        np.testing.assert_allclose(
+            np.asarray(result), np.arange(8192, dtype=np.float32) * 3.0)
+        assert handle._ring.inline_fallbacks >= 1
+        assert handle.payload_bytes_out >= 8192 * 4  # inline: full payload
+    finally:
+        handle.close()
+        detach_all()
+
+
+def test_shm_sigkill_mid_run_all_tasks_complete():
+    """The proc fault-tolerance suite holds over shm://: a worker that
+    dies mid-batch loses its ring, its leases expire via heartbeat, and
+    the survivor completes 100% of the tasks."""
+    lookup = LookupService()
+    n_tasks = 24
+    with NowPool(2, lookup, task_delay_s=0.02, service_prefix="skw",
+                 transport="shm") as pool:
+        victim = pool.workers[0].service_id
+        prog = Program(lambda x: x + 1.0, name="inc")
+        tasks = [jnp.full((1024,), float(i)) for i in range(n_tasks)]
+        out: list = []
+        cm = BasicClient(prog, None, tasks, out, lookup=lookup, lease_s=5.0,
+                         speculation=False, max_batch=4, max_inflight=2)
+        killed = threading.Event()
+
+        def killer():
+            if cm.repository.wait_until(
+                    lambda s: s["per_service"].get(victim, 0) >= 1,
+                    timeout=60.0):
+                pool.kill(0)
+                killed.set()
+
+        threading.Thread(target=killer, daemon=True).start()
+        cm.compute(timeout=120)
+        assert killed.is_set(), "victim finished before the kill fired"
+        assert not pool.workers[0].alive
+        assert len(out) == n_tasks
+        for i, got in enumerate(out):
+            np.testing.assert_allclose(np.asarray(got)[0], i + 1.0)
+    detach_all()

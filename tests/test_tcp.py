@@ -1,0 +1,216 @@
+"""tcp:// — the multi-host NoW transport, end to end.
+
+Control plane: a network LookupServer + RemoteLookup proxies (the four
+Jini verbs crossing a socket).  Data plane: proc's wire protocol.  The
+fault story under test is the paper's: workers that die without goodbye
+are re-leased, and a lookup that drops connections or restarts is
+absorbed by reconnect-with-backoff + owned-descriptor replay.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BasicClient, Farm, Program, Seq, interpret, resolve_handle
+from repro.core.errors import TransportError
+from repro.core.transport.tcp import (LookupServer, RemoteLookup, TcpHandle,
+                                      descriptor_to_wire)
+from repro.core.discovery import ServiceDescriptor
+from repro.launch.tcp import TcpPool
+
+
+# --------------------------------------------------------------------- #
+# the lookup protocol over the wire (no workers)
+# --------------------------------------------------------------------- #
+@pytest.fixture()
+def lookup_server():
+    server = LookupServer()
+    yield server
+    server.close()
+
+
+def test_remote_lookup_speaks_the_four_jini_verbs(lookup_server):
+    lk = RemoteLookup(lookup_server.address)
+    try:
+        joined, left = [], []
+        two, gone = threading.Event(), threading.Event()
+
+        def on_join(d):
+            joined.append(d.service_id)
+            if len(joined) >= 2:
+                two.set()
+
+        def on_leave(sid):
+            left.append(sid)
+            gone.set()
+
+        lk.subscribe(on_join, on_unregister=on_leave)
+        lk.register(ServiceDescriptor("a", "tcp://h:1", {"rev": 1}))
+        lk.register(ServiceDescriptor("b", "tcp://h:2"))
+        assert lk.wait_for_services(2, timeout_s=10.0)
+        assert len(lk) == 2
+        assert {d.service_id for d in lk.query()} == {"a", "b"}
+        (got,) = lk.query(lambda d: d.service_id == "a")
+        assert got.endpoint == "tcp://h:1" and got.capabilities["rev"] == 1
+        assert two.wait(10.0)  # register events arrived over the socket
+        lk.unregister("a")
+        assert not lk.wait_for_services(2, timeout_s=0.2)
+        assert gone.wait(10.0) and left == ["a"]
+    finally:
+        lk.close()
+
+
+def test_live_object_descriptor_cannot_cross_the_network(lookup_server):
+    from repro.core import Service
+
+    lk = RemoteLookup(lookup_server.address)
+    try:
+        svc = Service(None, service_id="local")
+        with pytest.raises(TransportError, match="non-address endpoint"):
+            descriptor_to_wire(ServiceDescriptor("local", svc))
+        with pytest.raises(TransportError, match="non-address endpoint"):
+            lk.register(ServiceDescriptor("local", svc))
+        assert len(lk) == 0  # the bad descriptor was never owned or sent
+    finally:
+        lk.close()
+
+
+def test_owned_registrations_replay_after_lookup_restart(lookup_server):
+    """The flaky-registration fault path: a lookup crash+restart forgets
+    every registration; a RemoteLookup that owns descriptors must replay
+    them on its next reconnect — here driven by the keepalive, exactly
+    how an idle worker would notice."""
+    lk = RemoteLookup(lookup_server.address, keepalive_s=0.05)
+    watcher = RemoteLookup(lookup_server.address)
+    try:
+        lk.register(ServiceDescriptor("w", "tcp://h:9"))
+        assert watcher.wait_for_services(1, timeout_s=10.0)
+        lookup_server.restart()  # connections die, registry wiped
+        assert watcher.wait_for_services(1, timeout_s=30.0)
+        (got,) = watcher.query()
+        assert got.service_id == "w"
+        assert lk.reconnects >= 1
+        assert lk.replayed_registrations >= 1
+    finally:
+        lk.close()
+        watcher.close()
+
+
+def test_subscription_resyncs_after_drop(lookup_server):
+    """Events lost during an outage are replaced by a registry replay on
+    reconnect — recruitment is idempotent, so replay is the safe side."""
+    owner = RemoteLookup(lookup_server.address, keepalive_s=0.05)
+    sub = RemoteLookup(lookup_server.address)
+    try:
+        owner.register(ServiceDescriptor("w1", "tcp://h:1"))
+        seen, first = [], threading.Event()
+        resynced = threading.Event()
+
+        def on_join(d):
+            seen.append(d.service_id)
+            first.set()
+            if seen.count("w1") >= 2:
+                resynced.set()  # the replay after reconnect
+
+        sub.subscribe(on_join)
+        assert first.wait(10.0)
+        lookup_server.drop_connections()  # registry intact, conns dead
+        assert resynced.wait(30.0)
+    finally:
+        owner.close()
+        sub.close()
+
+
+# --------------------------------------------------------------------- #
+# the full farm across the (local) machine boundary
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def tcp_cluster():
+    with TcpPool(2, service_prefix="tw") as pool:
+        yield pool
+
+
+def test_tcp_farm_matches_interpret(tcp_cluster):
+    pool = tcp_cluster
+    prog = Program(lambda x: x * x - 1.0, name="sqm1")
+    tasks = [jnp.asarray(float(i)) for i in range(10)]
+    reference = [float(v) for v in interpret(Farm(Seq(prog)), tasks)]
+    for kwargs in ({}, {"max_batch": 4, "max_inflight": 2}):
+        out: list = []
+        BasicClient(prog, None, tasks, out, lookup=pool.lookup,
+                    speculation=False, **kwargs).compute(timeout=120)
+        assert [float(v) for v in out] == reference
+    # released workers re-register THEMSELVES through their RemoteLookup
+    assert pool.lookup.wait_for_services(2, timeout_s=15.0)
+
+
+def test_tcp_reconnect_invalidates_prepared_programs(tcp_cluster):
+    """Satellite of the tentpole: worker program tables are per
+    connection, so a reconnected handle must re-ship programs — without
+    clearing ``_prepared`` the first post-reconnect execute dies with
+    'program not prepared'."""
+    pool = tcp_cluster
+    sid = pool.workers[0].service_id
+    (desc,) = pool.lookup.query(lambda d: d.service_id == sid)
+    handle = resolve_handle(desc)
+    assert isinstance(handle, TcpHandle)
+    try:
+        prog = Program(lambda x: x * 3.0, name="tri")
+        assert float(np.asarray(handle.execute(prog, jnp.asarray(2.0)))) == 6.0
+        assert prog.uid in handle._prepared
+        handle.reconnect()
+        assert handle.reconnects == 1
+        assert prog.uid not in handle._prepared
+        assert float(np.asarray(handle.execute(prog, jnp.asarray(3.0)))) == 9.0
+    finally:
+        handle.close()
+
+
+def test_tcp_workers_reregister_after_lookup_restart(tcp_cluster):
+    """Drop-connection/reconnect re-registration, with real workers: the
+    lookup restarts empty, both workers notice via keepalive and replay
+    their registrations, and the farm computes again afterwards."""
+    pool = tcp_cluster
+    assert pool.lookup.wait_for_services(2, timeout_s=15.0)
+    pool.server.restart()
+    assert pool.lookup.wait_for_services(2, timeout_s=30.0)
+    assert ({d.service_id for d in pool.lookup.query()}
+            == {w.service_id for w in pool.workers})
+    out: list = []
+    prog = Program(lambda x: x + 0.5, name="half")
+    BasicClient(prog, None, [jnp.asarray(float(i)) for i in range(4)], out,
+                lookup=pool.lookup, speculation=False).compute(timeout=120)
+    assert [float(v) for v in out] == [0.5, 1.5, 2.5, 3.5]
+    assert pool.lookup.wait_for_services(2, timeout_s=15.0)
+
+
+def test_tcp_sigkill_mid_run_all_tasks_complete():
+    """The fault-tolerance suite over tcp://: worker SIGKILLed mid-batch
+    → heartbeat expires its leases → tasks re-lease to the survivor →
+    100% completion.  Its stale registration is cleaned up on the next
+    resolve attempt."""
+    n_tasks = 40
+    with TcpPool(2, task_delay_s=0.02, service_prefix="kw") as pool:
+        victim = pool.workers[0].service_id
+        prog = Program(lambda x: x + 1.0, name="inc")
+        tasks = [jnp.asarray(float(i)) for i in range(n_tasks)]
+        out: list = []
+        cm = BasicClient(prog, None, tasks, out, lookup=pool.lookup,
+                         lease_s=5.0, speculation=False, max_batch=4,
+                         max_inflight=2)
+        killed = threading.Event()
+
+        def killer():
+            if cm.repository.wait_until(
+                    lambda s: s["per_service"].get(victim, 0) >= 1,
+                    timeout=60.0):
+                pool.kill(0)  # SIGKILL: no unregister, no goodbye frames
+                killed.set()
+
+        threading.Thread(target=killer, daemon=True).start()
+        cm.compute(timeout=120)
+        assert killed.is_set(), "victim finished before the kill fired"
+        assert not pool.workers[0].alive
+        assert [float(v) for v in out] == [i + 1.0 for i in range(n_tasks)]

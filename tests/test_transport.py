@@ -1,8 +1,13 @@
 """Transport layer: wire protocol, endpoint resolution, and the proc
 backend — real worker processes, real sockets, real SIGKILL."""
 
+import gc
+import os
+import random
 import socket
+import struct
 import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -12,10 +17,13 @@ from repro.core import (BasicClient, Farm, LookupService, Program,
                         RemoteProgramError, Seq, Service, TaskRepository,
                         interpret, resolve_handle)
 from repro.core.discovery import ServiceDescriptor
+from repro.core.errors import TransportError
 from repro.core.transport import LivenessMonitor
-from repro.core.transport.wire import (dump_program, dump_pytree,
-                                       load_program, load_pytree, recv_frame,
-                                       send_frame)
+from repro.core.transport import wire
+from repro.core.transport.wire import (MAX_FRAME_BYTES, dump_program,
+                                       dump_pytree, load_program, load_pytree,
+                                       pack_envelope, recv_frame, send_frame,
+                                       unpack_envelope)
 from repro.launch.now import NowPool
 
 
@@ -45,6 +53,123 @@ def test_program_ships_and_still_computes():
     q = load_program(dump_program(p))
     assert q.name == "tri"
     assert float(q(jnp.asarray(2.0))) == 6.0
+
+
+# --------------------------------------------------------------------- #
+# wire protocol: malformed frames must fail as TransportError — cleanly,
+# immediately, and without allocation (satellite regressions + fuzz)
+# --------------------------------------------------------------------- #
+def _feed(raw: bytes) -> socket.socket:
+    """A socket whose peer wrote ``raw`` and hung up — every truncation
+    and corruption scenario, without a worker process."""
+    a, b = socket.socketpair()
+    a.sendall(raw)
+    a.close()
+    b.settimeout(5.0)  # a hang is a test failure, not a CI timeout
+    return b
+
+
+def _expect_transport_error(raw: bytes, match: str) -> None:
+    b = _feed(raw)
+    try:
+        with pytest.raises(TransportError, match=match):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_zero_length_frame_is_a_clean_transport_error():
+    """Satellite regression: a zero-length frame used to slip through to
+    ``unpack_envelope(b"")`` and die with "unknown envelope tag b''" —
+    sending people hunting a codec bug that never existed."""
+    with pytest.raises(TransportError, match="zero-length frame"):
+        unpack_envelope(b"")
+    _expect_transport_error(struct.pack(">I", 0), "zero-length frame")
+
+
+def test_truncated_header_is_a_transport_error():
+    _expect_transport_error(b"\x00\x00", "mid-frame header")
+
+
+def test_truncated_body_is_a_transport_error():
+    _expect_transport_error(struct.pack(">I", 100) + b"M" + b"x" * 10,
+                            "mid-frame body")
+
+
+def test_corrupt_envelope_tag_is_a_transport_error():
+    body = b"Xjunk"
+    _expect_transport_error(struct.pack(">I", len(body)) + body,
+                            "unknown envelope tag")
+
+
+def test_corrupt_msgpack_body_is_a_transport_error():
+    body = b"M" + b"\xc1\xc1\xc1"  # 0xc1 is reserved in msgpack
+    _expect_transport_error(struct.pack(">I", len(body)) + body,
+                            "corrupt msgpack envelope")
+
+
+def test_non_dict_envelope_is_a_transport_error():
+    msgpack = pytest.importorskip("msgpack")
+    body = b"M" + msgpack.packb([1, 2, 3])
+    _expect_transport_error(struct.pack(">I", len(body)) + body,
+                            "expected dict")
+
+
+def test_oversized_length_prefix_rejected_without_allocation():
+    """A corrupt length prefix must be a protocol error, not a giant
+    ``recv`` — the reader rejects it straight off the 4 header bytes."""
+    t0 = time.monotonic()
+    _expect_transport_error(struct.pack(">I", MAX_FRAME_BYTES + 1)
+                            + b"M" + b"x" * 16, "announced")
+    assert time.monotonic() - t0 < 1.0  # no body read, no buffer sizing
+
+
+def test_pickle_fallback_roundtrip_without_msgpack(monkeypatch):
+    """Bare installs (no msgpack) use pickle envelopes — same frames, tag
+    ``P``; a peer that still sends msgpack gets a clean TransportError."""
+    monkeypatch.setattr(wire, "_msgpack", None)
+    data = pack_envelope({"op": "hello", "blob": b"\x01" * 64})
+    assert data[:1] == b"P"
+    msg = unpack_envelope(data)
+    assert msg["op"] == "hello" and len(msg["blob"]) == 64
+    a, b = socket.socketpair()
+    try:
+        send_frame(a, {"op": "ping"})
+        assert recv_frame(b) == {"op": "ping"}
+        with pytest.raises(TransportError, match="msgpack"):
+            unpack_envelope(b"M\x81")
+    finally:
+        a.close()
+        b.close()
+
+
+def test_corrupt_pickle_body_is_a_transport_error():
+    body = b"P" + b"\x80\x05junk-not-a-pickle"
+    _expect_transport_error(struct.pack(">I", len(body)) + body,
+                            "corrupt pickle envelope")
+
+
+def test_fuzz_corrupted_frames_never_hang_and_fail_as_transport_error():
+    """Property: for ANY corruption of a valid frame, recv_frame either
+    returns a dict, reports clean EOF, or raises TransportError — it never
+    hangs (5s socket timeout would surface as socket.timeout) and never
+    raises anything else."""
+    frame = pack_envelope({"op": "execute", "uid": 7,
+                           "payload": b"\x00" * 50})
+    raw = struct.pack(">I", len(frame)) + frame
+    rng = random.Random(1306)  # fixed seed: reproducible trials
+    for _ in range(200):
+        corrupt = bytearray(raw)
+        for _ in range(rng.randint(1, 3)):
+            corrupt[rng.randrange(len(corrupt))] = rng.randrange(256)
+        b = _feed(bytes(corrupt))
+        try:
+            msg = recv_frame(b)
+            assert msg is None or isinstance(msg, dict)
+        except TransportError:
+            pass  # the only acceptable exception
+        finally:
+            b.close()
 
 
 # --------------------------------------------------------------------- #
@@ -125,6 +250,43 @@ def test_liveness_monitor_expires_dead_services_leases():
             monitor.stop()
 
 
+class _ClosableFakeHandle:
+    service_id = "leaky"
+    needs_heartbeat = True
+
+    def __init__(self):
+        self.alive = True
+        self.closed = 0
+
+    def ping(self):
+        return self.alive
+
+    def close(self):
+        self.closed += 1
+
+
+def test_liveness_monitor_closes_dead_handle():
+    """Satellite regression: on a declared death the monitor dropped the
+    handle from its watch map but never ``close()``d it — one leaked
+    socket fd per dead worker, forever.  The handle must be closed after
+    ``on_dead`` fires."""
+    monitor = LivenessMonitor(interval_s=0.02, timeout_s=0.08)
+    handle = _ClosableFakeHandle()
+    died = threading.Event()
+    monitor.watch(handle, lambda sid: died.set())
+    try:
+        handle.alive = False
+        assert died.wait(10.0)
+        # close() happens right after on_dead in the same monitor sweep
+        deadline = time.monotonic() + 5.0
+        while handle.closed == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert handle.closed >= 1
+        assert monitor.deaths == 1
+    finally:
+        monitor.stop()
+
+
 # --------------------------------------------------------------------- #
 # proc backend: worker processes on sockets
 # --------------------------------------------------------------------- #
@@ -199,9 +361,18 @@ def _die_mid_batch_scenario(handle_a, handle_b):
     assert repo.stats()["per_service"] == {"B": 4}
 
 
+def _open_fds() -> int | None:
+    try:
+        return len(os.listdir("/proc/self/fd"))
+    except OSError:  # no /proc (macOS): skip the fd-hygiene assertion
+        return None
+
+
 def test_proc_sigkill_mid_run_all_tasks_complete():
     lookup = LookupService()
     n_tasks = 40
+    gc.collect()
+    fds_before = _open_fds()
     with NowPool(2, lookup, task_delay_s=0.02, service_prefix="kw") as pool:
         victim = pool.workers[0].service_id
         prog = Program(lambda x: x + 1.0, name="inc")
@@ -225,6 +396,15 @@ def test_proc_sigkill_mid_run_all_tasks_complete():
         assert killed.is_set(), "victim finished before the kill fired"
         assert not pool.workers[0].alive
         assert [float(v) for v in out] == [i + 1.0 for i in range(n_tasks)]
+    # fd hygiene (the LivenessMonitor close fix): a declared death must
+    # not leak the dead worker's socket — after pool teardown the process
+    # is back to (about) its starting fd count
+    if fds_before is not None:
+        gc.collect()
+        deadline = time.monotonic() + 5.0
+        while _open_fds() > fds_before + 3 and time.monotonic() < deadline:
+            time.sleep(0.05)  # kernel close is async-ish under load
+        assert _open_fds() <= fds_before + 3, "socket fds leaked"
 
 
 def test_proc_remote_program_error_surfaces(proc_cluster):
