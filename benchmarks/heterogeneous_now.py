@@ -31,6 +31,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import Farm, Program, Seq, interpret  # noqa: E402
+from repro.obs import Observability  # noqa: E402
+from repro.obs.export import (export_chrome_trace,  # noqa: E402
+                              validate_chrome_trace)
 from repro.sim import SimCluster  # noqa: E402
 
 # one shared program: its jit wrappers (and XLA's tracing cache) are
@@ -55,15 +58,19 @@ def run_mix(mix: list[float], *, seed: int, n_tasks: int,
     speeds = mix[: degree or len(mix)]
     tasks = _tasks(n_tasks)
     reference = [float(v) for v in interpret(Farm(Seq(PROGRAM)), tasks)]
+    # the recorder IS the assignment trace now (the bespoke on_lease hook
+    # is deprecated): lease events carry (service_id, ((tid, attempt),…))
+    obs = Observability()
     t0 = time.perf_counter()
     with SimCluster(speed_factors=speeds, seed=seed,
                     base_cost_s=base_cost_ms / 1e3,
                     latency_s=latency_ms / 1e3,
-                    latency_jitter_s=latency_ms / 1e4) as cluster:
+                    latency_jitter_s=latency_ms / 1e4,
+                    obs=obs) as cluster:
         out, client = cluster.run(PROGRAM, tasks, max_batch=max_batch,
                                   max_inflight=2, lease_s=5.0)
         makespan = cluster.clock.monotonic()
-        trace = list(cluster.trace)
+        trace = obs.events()
         stats = client.stats()
         ideal = cluster.ideal_makespan(n_tasks)
     wall_ms = (time.perf_counter() - t0) * 1e3
@@ -80,6 +87,7 @@ def run_mix(mix: list[float], *, seed: int, n_tasks: int,
         "per_service": stats["per_service"],
         "trace_len": len(trace),
         "_trace": trace,  # stripped before JSON; used for determinism check
+        "_obs": obs,      # stripped before JSON; used for --trace export
     }
 
 
@@ -123,6 +131,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="write rows to this JSON file "
                          "(e.g. BENCH_heterogeneous.json)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the full-degree run of the last mix as "
+                         "Chrome trace-event JSON (load in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args(argv)
 
     mixes = ([[float(s) for s in args.mix.split(",")]] if args.mix
@@ -132,13 +144,15 @@ def main(argv=None) -> int:
               max_batch=args.max_batch)
 
     all_rows = []
+    last_full = None
     for mix in mixes:
         rows = efficiency_curve(mix, **kw)
         # determinism gate: the full-degree run, repeated with the same
-        # seed, must produce the identical assignment trace
+        # seed, must produce the identical recorder event trace
         rerun = run_mix(mix, **kw)
         assert rerun["_trace"] == rows[-1]["_trace"], (
             "same seed produced a different task-to-service trace")
+        last_full = rows[-1]
         uniform = len(set(mix)) == 1
         floor = UNIFORM_FLOOR if uniform else HETERO_FLOOR
         full = rows[-1]
@@ -154,6 +168,13 @@ def main(argv=None) -> int:
                   f"trace=deterministic")
         all_rows.extend(rows)
 
+    if args.trace and last_full is not None:
+        export_chrome_trace(last_full["_obs"], args.trace)
+        info = validate_chrome_trace(args.trace)
+        print(f"wrote {args.trace} ({info['events']} trace events, "
+              f"{info['service_tracks']} service tracks, "
+              f"{len(info['event_types'])} event types)")
+
     if args.out:
         payload = {
             "benchmark": "heterogeneous_now",
@@ -163,7 +184,8 @@ def main(argv=None) -> int:
                        "base_cost_ms": args.base_cost_ms,
                        "latency_ms": args.latency_ms,
                        "max_batch": args.max_batch},
-            "rows": [{k: v for k, v in r.items() if k != "_trace"}
+            "rows": [{k: v for k, v in r.items()
+                      if k not in ("_trace", "_obs")}
                      for r in all_rows],
         }
         with open(args.out, "w") as f:

@@ -65,6 +65,20 @@ def run_contention(args) -> None:
               "--out", args.contention_out])
 
 
+def run_obs(args) -> None:
+    """The telemetry-spine gate: recorder overhead vs tracing-disabled
+    on the batched inproc path (≤3%), plus the heterogeneous-NoW Chrome
+    trace artifact; writes ``BENCH_obs.json`` and the trace JSON.  CI
+    runs a reduced configuration; the committed figures come from the
+    module's defaults (``benchmarks/observability.py``)."""
+    from benchmarks import observability as mod
+
+    mod.main(["--tasks", str(args.obs_tasks),
+              "--repeats", str(args.obs_repeats),
+              "--out", args.obs_out,
+              "--trace-out", args.obs_trace_out])
+
+
 def run_wire(args) -> None:
     """The transport gate: µs/task and socket payload bytes for inproc vs
     shm vs proc vs tcp on array payloads; writes ``BENCH_wire.json`` and
@@ -106,6 +120,19 @@ def main() -> None:
     ap.add_argument("--contention-per-service", type=int, default=128)
     ap.add_argument("--contention-repeats", type=int, default=2)
     ap.add_argument("--contention-out", default="BENCH_contention.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="only run the telemetry-spine gate (recorder "
+                         "overhead vs tracing-disabled + the hetero-NoW "
+                         "Perfetto trace; writes BENCH_obs.json and "
+                         "BENCH_obs_trace.json)")
+    ap.add_argument("--obs-tasks", type=int, default=10_000)
+    ap.add_argument("--obs-repeats", type=int, default=2)
+    ap.add_argument("--obs-out", default="BENCH_obs.json")
+    ap.add_argument("--obs-trace-out", default="BENCH_obs_trace.json")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with the full table: also export a Chrome "
+                         "trace-event JSON of the heterogeneous-NoW "
+                         "scenario to PATH (load in Perfetto)")
     ap.add_argument("--wire", action="store_true",
                     help="only run the transport wire gate (inproc/shm/"
                          "proc/tcp µs-per-task + socket payload bytes; "
@@ -133,6 +160,9 @@ def main() -> None:
     if args.contention:
         run_contention(args)
         return
+    if args.obs:
+        run_obs(args)
+        return
     if args.wire:
         run_wire(args)
         return
@@ -140,14 +170,23 @@ def main() -> None:
     from benchmarks import (contention, elasticity, engine_overhead,
                             farm_scalability, fault_tolerance,
                             heterogeneous_now, kernels, load_balance,
-                            multi_tenant, normal_form, scale, wire)
+                            multi_tenant, normal_form, observability,
+                            scale, wire)
 
     print("name,us_per_call,derived")
     for mod in (farm_scalability, load_balance, fault_tolerance, normal_form,
                 elasticity, heterogeneous_now, multi_tenant, engine_overhead,
-                scale, contention, wire, kernels):
+                scale, contention, wire, observability, kernels):
         for name, us, derived in mod.bench():
             print(f"{name},{us:.1f},{derived}")
+
+    if args.trace:
+        from benchmarks.observability import export_hetero_trace
+
+        info = export_hetero_trace(args.trace)
+        print(f"trace/{args.trace},{info['events']},"
+              f"tracks={info['service_tracks']} "
+              f"types={len(info['event_types'])}")
 
     # roofline summary (if the dry-run grid has been produced)
     dr = os.path.join(os.path.dirname(__file__), "results", "dryrun")

@@ -45,6 +45,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import Program  # noqa: E402
+from repro.obs import Observability  # noqa: E402
 from repro.sim import FaultSpec, SimCluster  # noqa: E402
 
 PROGRAM = Program(lambda x: x * 3.0 + 1.0, name="affine", jit=False)
@@ -54,9 +55,12 @@ REBALANCE_CEILING = 16         # arbiter recomputes, steady single-job run
 COALESCE_CEILING = 10          # recomputes for an N-service join burst
 
 
-class _HashingTrace:
-    """A list-shaped sink that folds every appended event into a running
-    SHA-256 — the determinism artifact without the 1M-entry list."""
+class _LeaseHash:
+    """Recorder sink that folds every ``lease``/``speculate`` event into a
+    running SHA-256 — the determinism artifact without the 1M-entry list.
+    Replaces the bespoke ``on_lease`` hook (now deprecated): the recorder
+    stream carries the same assignments, and the sink keeps the run in
+    O(1) memory (``ring_size=0`` retains nothing)."""
 
     __slots__ = ("n", "_h")
 
@@ -64,9 +68,11 @@ class _HashingTrace:
         self.n = 0
         self._h = hashlib.sha256()
 
-    def append(self, item) -> None:
+    def __call__(self, ring_name, ev) -> None:
+        if ev[1] not in ("lease", "speculate"):
+            return
         self.n += 1
-        self._h.update(repr(item).encode())
+        self._h.update(repr(ev).encode())
 
     def digest(self) -> str:
         return self._h.hexdigest()
@@ -89,11 +95,13 @@ def run_stream(*, n_services: int, n_tasks: int, seed: int,
     lease/scheduler trace hashes."""
     base_cost_s = target_makespan_s * n_services / n_tasks
     window = max(1024, 4 * n_services * max_batch)
+    lease_hash = _LeaseHash()  # hash, don't store (1M leases)
+    obs = Observability(ring_size=0, sink=lease_hash)
     t0 = time.perf_counter()
     with SimCluster(speed_factors=[1.0] * n_services, seed=seed,
                     base_cost_s=base_cost_s, latency_s=0.0,
-                    faults=faults, stall_timeout_s=900.0) as cluster:
-        cluster.trace = _HashingTrace()  # hash, don't store (1M leases)
+                    faults=faults, stall_timeout_s=900.0,
+                    obs=obs) as cluster:
         sched = cluster.make_scheduler(
             max_batch=max_batch, max_inflight=1, adaptive_batching=False,
             speculation=speculation, incremental_arbiter=incremental)
@@ -125,8 +133,8 @@ def run_stream(*, n_services: int, n_tasks: int, seed: int,
                 "revocations": sched.revocations,
                 "reschedules": stats["reschedules"],
                 "per_dispatch_us": wall_run_s * 1e6 / n_tasks,
-                "lease_trace_hash": cluster.trace.digest(),
-                "lease_trace_len": cluster.trace.n,
+                "lease_trace_hash": lease_hash.digest(),
+                "lease_trace_len": lease_hash.n,
             }
             cluster.clock.sleep(5.0)  # quiesce (silent-death hangs drain)
             row["sched_trace_hash"] = _trace_hash(sched.trace)
@@ -164,8 +172,8 @@ def run_coalescing(*, n_late: int, seed: int, n_tasks: int = 4000,
     # at t=0.3 lands mid-run and the joiners pick up real work.
     with SimCluster(speed_factors=[1.0] * (4 + n_late), seed=seed,
                     base_cost_s=4.0 / n_tasks, latency_s=0.0,
-                    faults=faults, stall_timeout_s=900.0) as cluster:
-        cluster.trace = _HashingTrace()
+                    faults=faults, stall_timeout_s=900.0,
+                    obs=Observability(ring_size=0)) as cluster:
         sched = cluster.make_scheduler(max_batch=max_batch, max_inflight=1,
                                        adaptive_batching=False,
                                        speculation=False)

@@ -58,7 +58,7 @@ class BasicClient:
                  elastic: bool = True, max_batch: int = 1,
                  max_inflight: int = 1, adaptive_batching: bool = True,
                  target_batch_latency_s: float = 0.05, shards: int = 1,
-                 clock=None, on_lease=None):
+                 clock=None, on_lease=None, obs=None):
         """Batching knobs (beyond-paper hot path; defaults reproduce the
         paper's one-task-per-round-trip dispatch exactly):
 
@@ -86,7 +86,12 @@ class BasicClient:
             :class:`repro.sim.VirtualClock` here.
         on_lease
             Assignment-trace hook: ``(task_id, service_id, attempt, t)``
-            per lease/speculative issue, in lease order.
+            per lease/speculative issue, in lease order.  Deprecated in
+            favor of ``obs`` (the recorder's ``lease`` events carry the
+            same information and more); kept for compatibility.
+        obs
+            Optional :class:`repro.obs.Observability` bundle: structured
+            trace events + metrics from the whole dispatch path.
         """
         from repro.farm import FarmScheduler
 
@@ -111,7 +116,9 @@ class BasicClient:
             lease_s=lease_s, speculation=speculation, max_batch=max_batch,
             max_inflight=max_inflight, adaptive_batching=adaptive_batching,
             target_batch_latency_s=target_batch_latency_s, shards=shards,
-            on_lease=engine_on_lease, elastic=elastic, admit=self._admit)
+            on_lease=engine_on_lease, elastic=elastic, admit=self._admit,
+            obs=obs)
+        self.obs = obs
         # the one job: finite stream, results kept in the repository (the
         # deliverable is results() in submission order, so no consumer
         # buffer) — registered now, dispatched when compute() starts the

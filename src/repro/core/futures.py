@@ -40,7 +40,7 @@ class FarmExecutor:
                  speculation: bool = True, max_batch: int = 1,
                  max_inflight: int = 1, adaptive_batching: bool = True,
                  target_batch_latency_s: float = 0.05, shards: int = 1,
-                 clock=None, on_lease=None):
+                 clock=None, on_lease=None, obs=None):
         from repro.farm import FarmScheduler
 
         engine_on_lease = None
@@ -53,7 +53,8 @@ class FarmExecutor:
             speculation=speculation, max_batch=max_batch,
             max_inflight=max_inflight, adaptive_batching=adaptive_batching,
             target_batch_latency_s=target_batch_latency_s, shards=shards,
-            on_lease=engine_on_lease)
+            on_lease=engine_on_lease, obs=obs)
+        self.obs = obs
         # the one job: an open stream (closed only at shutdown), results
         # buffered for the consumer thread, completed records reclaimed —
         # peak memory is the in-flight window, not the whole stream

@@ -68,6 +68,9 @@ class ControlThread(threading.Thread):
         super().__init__(daemon=True, name=name or f"ctl-{handle.service_id}")
         self.client = client
         self.handle = handle
+        # telemetry bundle from the owner surface (optional — None is
+        # the zero-overhead default)
+        self.obs = getattr(client, "obs", None)
         self._revoked = threading.Event()
         self.tasks_done = 0
         self.batches_dispatched = 0
@@ -131,6 +134,10 @@ class ControlThread(threading.Thread):
                     break
                 continue
             task_id, payload = got
+            obs = self.obs
+            if obs is not None:
+                t0 = self.client.clock.monotonic()
+                obs.event("dispatch", t0, sid, 1)
             try:
                 result = self.handle.execute(program, payload)
             except ServiceFailure:
@@ -142,6 +149,11 @@ class ControlThread(threading.Thread):
                 self.client._record_error(e)
                 self.client._thread_finished(self, crashed=True)
                 return
+            if obs is not None:
+                now = self.client.clock.monotonic()
+                obs.event("drain", now, sid, 1, t0)
+                obs.dispatch_latency_s.observe(now - t0)
+                obs.batch_size.observe(1)
             if repo.complete(task_id, result, sid):
                 self.tasks_done += 1
         self.client._thread_finished(self, crashed=False)
@@ -161,6 +173,11 @@ class ControlThread(threading.Thread):
                 self.client._record_error(e)
             return False
         now = self.client.clock.monotonic()
+        obs = self.obs
+        if obs is not None:
+            obs.event("drain", now, self.handle.service_id, len(task_ids),
+                      t_dispatch)
+            obs.dispatch_latency_s.observe(now - t_dispatch)
         # service time, not residence time: with max_inflight > 1 a batch
         # queues behind its predecessors, so time-since-dispatch would be
         # inflated ~max_inflight-fold and collapse the adaptive batch to 1.
@@ -224,6 +241,10 @@ class ControlThread(threading.Thread):
                 crashed = True
                 break
             self.batches_dispatched += 1
+            obs = self.obs
+            if obs is not None:
+                obs.event("dispatch", t0, sid, len(task_ids))
+                obs.batch_size.observe(len(task_ids))
             inflight.append((task_ids, results, t0))
             while len(inflight) >= self.client.max_inflight:
                 if not self._drain_one(inflight):

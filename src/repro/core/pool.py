@@ -71,6 +71,7 @@ class ServicePool:
     def __init__(self, lookup: LookupService, *, lock: threading.RLock,
                  clock=None, client_id: str = "pool",
                  admit: Callable[[ServiceDescriptor], bool] | None = None,
+                 obs=None,
                  on_join: Callable[[str, ServiceHandle], None] | None = None,
                  on_dead: Callable[[str], None] | None = None,
                  on_lost: Callable[[str], None] | None = None):
@@ -78,6 +79,9 @@ class ServicePool:
         self.clock = clock if clock is not None else REAL_CLOCK
         self.client_id = client_id
         self.admit = admit
+        # telemetry bundle stamped onto recruited handles so transports
+        # can record frame/reconnect/shm events (None = no telemetry)
+        self.obs = obs
         self.on_join = on_join
         self.on_dead = on_dead
         self.on_lost = on_lost
@@ -144,6 +148,8 @@ class ServicePool:
             handle = resolve_handle(desc, lookup=self.lookup)
             if handle is None:  # stale registration (endpoint already gone)
                 return False
+            if self.obs is not None:
+                handle.obs = self.obs
             # enter the map before recruiting: recruit() unregisters the
             # service from the lookup, and _on_unregister must see it as
             # ours rather than report it lost

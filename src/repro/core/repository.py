@@ -93,6 +93,7 @@ class TaskRecord:
     completed_by: str | None = None
     group_key: Any = None  # memoized compatibility key (see get_batch)
     group_key_set: bool = False
+    created_at: float = 0.0  # stamped only when telemetry is attached
 
 
 class _LockMeter:
@@ -163,17 +164,18 @@ class RepositoryShard:
     worst a one-iteration delay, never a correctness loss.
     """
 
-    __slots__ = ("owner", "index", "_clock", "meter", "_progress", "_work",
-                 "records", "_pending", "leases", "done_count",
+    __slots__ = ("owner", "index", "_clock", "_obs", "meter", "_progress",
+                 "_work", "records", "_pending", "leases", "done_count",
                  "leased_count", "reschedules", "_durations",
                  "completions_per_service")
 
     def __init__(self, owner: "TaskRepository", index: int, *, clock,
                  lease_s: float, speculation_factor: float,
-                 straggler_rate_factor: float, on_lease):
+                 straggler_rate_factor: float, on_lease, obs=None):
         self.owner = owner
         self.index = index
         self._clock = clock
+        self._obs = obs  # Observability bundle or None (no telemetry)
         self.meter = _LockMeter()
         self._progress = threading.Condition(self.meter.lock)
         self._work = threading.Condition(self.meter.lock)
@@ -199,6 +201,8 @@ class RepositoryShard:
     def _expire_locked(self) -> None:
         """Re-enqueue leases past their deadline (the LeaseTable pops only
         the actually-expired heap prefix)."""
+        obs = self._obs
+        expired = None
         for tid in self.leases.expired(self._clock.monotonic()):
             rec = self.records[tid]
             if rec.state != TaskState.LEASED:
@@ -207,6 +211,12 @@ class RepositoryShard:
             self.leased_count -= 1
             self._pending.append(tid)
             self.reschedules += 1
+            if obs is not None:
+                if expired is None:
+                    expired = []
+                expired.append(tid)
+        if expired:
+            obs.event("expire", None, tuple(expired))
 
     def maybe_work(self, now: float) -> bool:
         """Lock-free peek: could this shard have a leasable task right
@@ -236,8 +246,13 @@ class RepositoryShard:
                     # before anyone re-leased it — leasing it again would
                     # re-run (and double-count) a DONE task
                     continue
-                self._lease_locked(rec, service_id,
-                                   self._clock.monotonic())
+                now = self._clock.monotonic()
+                self._lease_locked(rec, service_id, now)
+                obs = self._obs
+                if obs is not None:
+                    obs.queue_wait_s.observe(now - rec.created_at)
+                    obs.event("lease", now, service_id,
+                              ((tid, rec.attempts),))
                 return tid, rec.payload
         return None
 
@@ -253,6 +268,9 @@ class RepositoryShard:
             if not self._pending:
                 return group_key
             now = self._clock.monotonic()
+            obs = self._obs
+            leased = None if obs is None else []
+            oldest = now
             skipped: list[int] = []
             while self._pending and len(batch) < max_batch:
                 tid = self._pending.popleft()
@@ -273,8 +291,18 @@ class RepositoryShard:
                     continue
                 self._lease_locked(rec, service_id, now)
                 batch.append((tid, rec.payload))
+                if leased is not None:
+                    leased.append((tid, rec.attempts))
+                    if rec.created_at < oldest:
+                        oldest = rec.created_at
             # skipped tasks go back to the head, original order
             self._pending.extendleft(reversed(skipped))
+            if leased:
+                # one queue-wait sample per dispatch (the oldest task's
+                # wait): a per-task observe here doubles the recorder's
+                # hot-path cost for no extra scheduling signal
+                obs.queue_wait_s.observe(now - oldest)
+                obs.event("lease", now, service_id, tuple(leased))
         return group_key
 
     def try_speculate(self, service_id: str):
@@ -287,8 +315,12 @@ class RepositoryShard:
                 return None
             rec = self.records[tid]
             rec.attempts += 1
+            now = self._clock.monotonic()
             self.leases.issue_speculative(tid, service_id, rec.attempts,
-                                          self._clock.monotonic())
+                                          now)
+            if self._obs is not None:
+                self._obs.event("speculate", now, service_id, tid,
+                                rec.attempts)
             return tid, rec.payload
 
     def park_leaser(self, remaining: float, next_deadline=_UNSET) -> None:
@@ -315,7 +347,7 @@ class RepositoryShard:
 
     # ---------------- completion ----------------------------------- #
     def _record_done_locked(self, rec: TaskRecord, result, service_id: str,
-                            now: float) -> None:
+                            now: float):
         owner = self.owner
         if rec.state == TaskState.LEASED:
             self.leased_count -= 1
@@ -330,6 +362,7 @@ class RepositoryShard:
             self._durations.append(now - lease.start)
         self.completions_per_service[service_id] = (
             self.completions_per_service.get(service_id, 0) + 1)
+        return lease
 
     def complete_some(self, results: list, service_id: str) -> list:
         """Record ``(task_id, result)`` pairs belonging to this shard
@@ -345,14 +378,26 @@ class RepositoryShard:
         owner = self.owner
         recorded: list[tuple[int, Any]] = []
         exhausted = False
+        obs = self._obs
+        spans = None if obs is None else []
         with self.meter:
             now = self._clock.monotonic()
             for task_id, result in results:
                 rec = self.records[task_id]
                 if rec.state == TaskState.DONE or owner._cancelled:
                     continue
-                self._record_done_locked(rec, result, service_id, now)
+                lease = self._record_done_locked(rec, result, service_id,
+                                                 now)
                 recorded.append((task_id, result))
+                if spans is not None:
+                    spans.append((task_id,
+                                  now if lease is None else lease.start))
+            if spans:
+                # one lease-duration sample per completion batch: the
+                # tasks of one drained dispatch were leased together, so
+                # their starts coincide in the common case
+                obs.lease_duration_s.observe(now - spans[0][1])
+                obs.event("complete", now, service_id, tuple(spans))
             if recorded:
                 owner._notify_progress_from(self)
                 if owner._exhausted():
@@ -376,6 +421,8 @@ class RepositoryShard:
                 self.leased_count -= 1
                 self._pending.append(task_id)
                 self.reschedules += 1
+                if self._obs is not None:
+                    self._obs.event("task-fail", None, service_id, task_id)
                 self._notify_all_locked()
 
     def expire_service_shard(self, service_id: str) -> int:
@@ -391,6 +438,9 @@ class RepositoryShard:
                 self.reschedules += 1
                 expired += 1
             if expired:
+                if self._obs is not None:
+                    self._obs.event("expire-service", None, service_id,
+                                    expired)
                 self._notify_all_locked()
         return expired
 
@@ -455,10 +505,11 @@ class TaskRepository:
                  speculation_factor: float = 3.0, on_complete=None,
                  streaming: bool = False, clock=None, on_lease=None,
                  straggler_rate_factor: float = 0.5,
-                 reclaim_done: bool = False, shards: int = 1):
+                 reclaim_done: bool = False, shards: int = 1, obs=None):
         if shards < 1:
             raise ValueError("shards must be >= 1")
         self._clock = clock if clock is not None else REAL_CLOCK
+        self._obs = obs  # Observability bundle or None (no telemetry)
         self.on_complete = on_complete  # callable(task_id, result)
         self.streaming = streaming  # open-ended stream (futures / jobs)
         # drop payload+result from each record the moment it completes —
@@ -473,7 +524,7 @@ class TaskRepository:
             RepositoryShard(self, k, clock=self._clock, lease_s=lease_s,
                             speculation_factor=speculation_factor,
                             straggler_rate_factor=straggler_rate_factor,
-                            on_lease=on_lease)
+                            on_lease=on_lease, obs=obs)
             for k in range(shards)]
         self.n_shards = shards
         # serializes task-id allocation (and add-vs-cancel) — held only
@@ -494,13 +545,16 @@ class TaskRepository:
                                else threading.Condition())
         self._progress_local = shards == 1
         self._progress_waiters = 0
+        t_submit = 0.0 if obs is None else self._clock.monotonic()
         for i, t in enumerate(tasks):
-            rec = TaskRecord(i, t)
+            rec = TaskRecord(i, t, created_at=t_submit)
             self.records[i] = rec
             shard = self._shards[i % shards]
             shard.records[i] = rec
             shard._pending.append(i)
         self._n_added = len(tasks)
+        if obs is not None and tasks:
+            obs.event("task-submit", t_submit, len(tasks), 0)
         # high-water mark of unfinished tasks — the streaming-submission
         # backpressure metric; tracked at add time under _add_lock so
         # submitters pay no repository-lock round-trip for it
@@ -623,7 +677,10 @@ class TaskRepository:
                 return 0
             self._cancelled = True
             self._closed = True
-        return sum(shard.cancel_shard() for shard in self._shards)
+        dropped = sum(shard.cancel_shard() for shard in self._shards)
+        if self._obs is not None:
+            self._obs.event("cancel", None, dropped)
+        return dropped
 
     def add_task(self, payload) -> int:
         """Streams can grow while the farm runs."""
@@ -641,14 +698,18 @@ class TaskRepository:
             n = self.n_shards
             base = self._n_added
             tids = []
+            obs = self._obs
+            t_submit = 0.0 if obs is None else self._clock.monotonic()
             per_shard: list[list] = [[] for _ in range(n)]
             for i, payload in enumerate(payloads):
                 tid = base + i
-                rec = TaskRecord(tid, payload)
+                rec = TaskRecord(tid, payload, created_at=t_submit)
                 self.records[tid] = rec
                 per_shard[tid % n].append(rec)
                 tids.append(tid)
             self._n_added = base + len(tids)
+            if obs is not None and tids:
+                obs.event("task-submit", t_submit, len(tids), base)
             for k, recs in enumerate(per_shard):
                 if recs:
                     self._shards[k].add_records(recs)
@@ -716,6 +777,9 @@ class TaskRepository:
                     if shard.maybe_work(now):
                         got = shard.try_lease_one(service_id)
                         if got is not None:
+                            if k and self._obs is not None:
+                                self._obs.event("steal", None, service_id,
+                                                shard.index, home)
                             return got
             if self._exhausted():
                 return None
@@ -785,9 +849,14 @@ class TaskRepository:
                 for k in range(n):
                     shard = shards[(home + k) % n]
                     if shard.maybe_work(now):
+                        filled = len(batch)
                         group_key = shard.fill_batch(
                             service_id, batch, max_batch, compatible,
                             group_key)
+                        if k and self._obs is not None \
+                                and len(batch) > filled:
+                            self._obs.event("steal", None, service_id,
+                                            shard.index, home)
                         if len(batch) >= max_batch:
                             break
             if batch:

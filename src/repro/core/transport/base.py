@@ -39,6 +39,10 @@ class ServiceHandle(abc.ABC):
     #: True when the backend can die silently (a real process) and the
     #: client should heartbeat it; the in-process backend cannot.
     needs_heartbeat: bool = False
+    #: optional :class:`repro.obs.Observability` bundle — stamped by the
+    #: recruiting :class:`~repro.core.pool.ServicePool` so transports can
+    #: record frame/reconnect/shm-ring events; ``None`` = no telemetry.
+    obs = None
 
     service_id: str
     capabilities: dict

@@ -144,6 +144,9 @@ class ProcHandle(ServiceHandle):
         reply = self._request({"op": "execute", "uid": program.uid,
                                "payload": data})
         self.payload_bytes_in += len(reply["result"])
+        if self.obs is not None:
+            self.obs.event("frame", None, self.service_id, len(data),
+                           len(reply["result"]))
         return self._load(reply["result"])
 
     def execute_batch(self, program, payloads: list, *, block: bool = True,
@@ -158,6 +161,9 @@ class ProcHandle(ServiceHandle):
                                "payloads": data,
                                "pad_to": pad_to})
         self.payload_bytes_in += len(reply["results"])
+        if self.obs is not None:
+            self.obs.event("frame", None, self.service_id, len(data),
+                           len(reply["results"]))
         return self._load(reply["results"])
 
     def reconnect(self) -> None:
@@ -183,6 +189,9 @@ class ProcHandle(ServiceHandle):
                     f"unreachable on reconnect: {e}") from e
             self._prepared.clear()
             self.reconnects += 1
+            if self.obs is not None:
+                self.obs.event("reconnect", None,
+                               getattr(self, "service_id", "?"))
             hello = self._request_locked(self._hello_msg())
         if hello["service_id"] != self.service_id:
             self.close()

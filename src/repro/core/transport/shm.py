@@ -246,7 +246,16 @@ class ShmHandle(ProcHandle):
                 "shm_bytes": self._ring.capacity}
 
     def _dump(self, tree) -> bytes:
-        return dump_pytree_shm(tree, self._ring)
+        obs = self.obs
+        if obs is None:
+            return dump_pytree_shm(tree, self._ring)
+        b0 = self._ring.bytes_written
+        f0 = self._ring.inline_fallbacks
+        data = dump_pytree_shm(tree, self._ring)
+        obs.event("shm-ring", None, getattr(self, "service_id", "?"),
+                  self._ring.bytes_written - b0,
+                  self._ring.inline_fallbacks - f0)
+        return data
 
     @property
     def shm_bytes_out(self) -> int:

@@ -259,6 +259,9 @@ class RemoteLookup:
         self._sub_thread: threading.Thread | None = None
         self.reconnects = 0
         self.replayed_registrations = 0
+        # optional telemetry bundle (repro.obs.Observability); attach
+        # post-construction to trace lookup-connection reconnects
+        self.obs = None
         if keepalive_s > 0:
             threading.Thread(target=self._keepalive_loop,
                              args=(keepalive_s,), daemon=True,
@@ -271,6 +274,8 @@ class RemoteLookup:
         sock.settimeout(None)
         if self._ever_connected:
             self.reconnects += 1
+            if self.obs is not None:
+                self.obs.event("reconnect", None, "lookup")
         self._ever_connected = True
         self._sock = sock
         # flaky-registration fault path: whatever we own must be

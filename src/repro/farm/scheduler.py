@@ -81,6 +81,7 @@ class _Slot:
         self.sid = handle.service_id
         # -- ControlThread's owner surface ---------------------------- #
         self.clock = scheduler.clock
+        self.obs = scheduler.obs
         self.program = job.program
         self.repository = job.repository
         self.speculation = job.speculation
@@ -115,6 +116,7 @@ class FarmScheduler:
                  admit: Callable[[ServiceDescriptor], bool] | None = None,
                  incremental_arbiter: bool = True,
                  rebalance_coalesce_s: float = 0.01,
+                 obs=None,
                  name: str = "farm"):
         """``max_batch``/``max_inflight``/... are *defaults* for submitted
         jobs (overridable per job).  ``on_lease(job_id, task_id,
@@ -127,11 +129,19 @@ class FarmScheduler:
         ``incremental_arbiter=False`` pins the legacy full-recompute
         arbiter path (the equivalence baseline the scale gates compare
         against); ``rebalance_coalesce_s`` is the burst window pool
-        events (joins/deaths) are coalesced over before one recompute."""
+        events (joins/deaths) are coalesced over before one recompute.
+        ``obs`` is an optional :class:`repro.obs.Observability` bundle:
+        when attached, the engine (and every layer below — repository,
+        control threads, transports) records structured trace events and
+        metrics through it, and ``stats()`` grows ``metrics``/``trace``
+        subtrees.  ``obs=None`` records nothing and costs nothing."""
         if max_concurrent_jobs < 1:
             raise ValueError("max_concurrent_jobs must be >= 1")
         self.lookup = lookup if lookup is not None else LookupService()
         self.clock = clock if clock is not None else REAL_CLOCK
+        self.obs = obs
+        if obs is not None:
+            obs.bind_clock(self.clock)
         self.name = name
         self.client_id = f"{name}-scheduler"
         self.max_concurrent_jobs = max_concurrent_jobs
@@ -147,7 +157,7 @@ class FarmScheduler:
         self._started = False
         self.pool = ServicePool(
             self.lookup, lock=self._lock, clock=self.clock,
-            client_id=self.client_id, admit=admit,
+            client_id=self.client_id, admit=admit, obs=obs,
             on_join=self._service_joined, on_dead=self._service_dead,
             on_lost=self._service_lost)
         self._assignment: dict[str, str] = {}          # sid -> job_id
@@ -241,6 +251,8 @@ class FarmScheduler:
         # ServicePool.on_join — under the scheduler lock
         self.trace.append(("service-join",
                            round(self.clock.monotonic(), 9), sid))
+        if self.obs is not None:
+            self.obs.event("recruit", None, sid, self.pool.speed(sid))
         if self._arbiter is not None:
             self._arbiter.service_joined(sid, 1.0 / self.pool.speed(sid))
         self._request_rebalance_locked(defer=True)
@@ -250,6 +262,8 @@ class FarmScheduler:
         # died pre-recruitment) — under the scheduler lock
         self.trace.append(("service-lost",
                            round(self.clock.monotonic(), 9), sid))
+        if self.obs is not None:
+            self.obs.event("service-lost", None, sid)
 
     def _service_dead(self, service_id: str) -> None:
         """LivenessMonitor verdict (ServicePool.on_dead): expire the dead
@@ -272,6 +286,8 @@ class FarmScheduler:
             self._arbiter.service_left(sid)
         self._assignment.pop(sid, None)
         self.trace.append((reason, round(self.clock.monotonic(), 9), sid))
+        if self.obs is not None:
+            self.obs.event(reason, None, sid)
 
     # ---------------- job lifecycle -------------------------------- #
     def submit(self, program, tasks: Sequence[Any] | Iterable[Any] | None = None,
@@ -302,7 +318,7 @@ class FarmScheduler:
             job_id = f"job-{self._seq}"
             self._seq += 1
         job = Job(self, job_id, program, weight=weight, name=name,
-                  on_lease=self.on_lease, **merged)
+                  on_lease=self.on_lease, obs=self.obs, **merged)
         if task_list is not None:
             job.add_tasks(task_list)  # private until admission: no lock
         with self._lock:
@@ -312,6 +328,8 @@ class FarmScheduler:
             self.trace.append(("job-submit",
                                round(self.clock.monotonic(), 9), job_id,
                                float(weight)))
+            if self.obs is not None:
+                self.obs.event("job-submit", None, job_id, float(weight))
             if len(self._running) < self.max_concurrent_jobs:
                 self._start_job_locked(job)
                 self._request_rebalance_locked(defer=False)
@@ -326,6 +344,8 @@ class FarmScheduler:
         job._mark_running()
         self.trace.append(("job-start",
                            round(self.clock.monotonic(), 9), job.job_id))
+        if self.obs is not None:
+            self.obs.event("job-start", None, job.job_id)
 
     def _admit_locked(self) -> None:
         while self._queue and len(self._running) < self.max_concurrent_jobs:
@@ -349,6 +369,8 @@ class FarmScheduler:
             job._mark_done()
             self.trace.append(("job-end", round(self.clock.monotonic(), 9),
                                job.job_id, job.state.value))
+            if self.obs is not None:
+                self.obs.event("job-end", None, job.job_id, job.state.value)
             if self._stop.is_set():
                 return
             self._admit_locked()
@@ -431,6 +453,8 @@ class FarmScheduler:
             desired = fair_assignment(self.pool.capacities(), jobs,
                                       self._assignment)
         now = round(self.clock.monotonic(), 9)
+        obs = self.obs
+        changed = 0
         for sid in self.pool.ids():
             new = desired.get(sid)
             old = self._assignment.get(sid)
@@ -443,12 +467,19 @@ class FarmScheduler:
             else:
                 self._assignment[sid] = new
             self.trace.append(("assign", now, sid, new))
+            changed += 1
+            if obs is not None:
+                obs.event("assign", now, sid, new)
             thread = self._threads.get(sid)
             if thread is not None:
                 self.revocations += 1
+                if obs is not None:
+                    obs.event("revoke", now, sid, old)
                 thread.revoke()  # _slot_finished re-dispatches on exit
             else:
                 self._dispatch_locked(sid)
+        if obs is not None:
+            obs.event("rebalance", now, len(jobs), changed)
 
     def _dispatch_locked(self, sid: str) -> None:
         if self._stop.is_set() or sid in self._threads:
@@ -546,10 +577,17 @@ class FarmScheduler:
     def stats(self) -> dict:
         """THE engine-level snapshot — every front-end's ``stats()``
         embeds this one shape (per-service pool membership + assignment,
-        batching telemetry, job lifecycle)."""
+        batching telemetry, job lifecycle, arbiter counters).  The key
+        set is versioned (``schema``) and pinned by
+        :mod:`repro.obs.schema`; with an Observability bundle attached
+        the snapshot additionally carries the metrics registry
+        (``metrics``) and recorder state (``trace``)."""
+        from repro.obs.schema import STATS_SCHEMA
+
         batching = self.batching_stats()
         with self._lock:
-            return {
+            snap = {
+                "schema": STATS_SCHEMA,
                 "services": {
                     sid: {"speed_factor": self.pool.speed(sid),
                           "job": self._assignment.get(sid)}
@@ -558,7 +596,14 @@ class FarmScheduler:
                 "running": list(self._running),
                 "queued": list(self._queue),
                 "rebalances": self.rebalances,
+                "rebalance_requests": self.rebalance_requests,
                 "revocations": self.revocations,
                 "batching": batching,
                 "jobs": {jid: j.stats() for jid, j in self._jobs.items()},
+                "arbiter": (self._arbiter.stats()
+                            if self._arbiter is not None else None),
             }
+        if self.obs is not None:
+            snap["metrics"] = self.obs.registry.snapshot()
+            snap["trace"] = self.obs.recorder.stats()
+        return snap

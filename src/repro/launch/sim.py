@@ -51,14 +51,14 @@ class SimPool:
                  base_cost_s: float = 0.001, latency_s: float = 0.0002,
                  latency_jitter_s: float = 0.0,
                  faults: dict[int, FaultSpec] | None = None,
-                 service_prefix: str = "sim"):
+                 service_prefix: str = "sim", obs=None):
         if speed_factors is not None and len(speed_factors) != n_workers:
             raise ValueError("speed_factors length must equal n_workers")
         self.cluster = SimCluster(
             n_workers, seed=seed, speed_factors=speed_factors,
             base_cost_s=base_cost_s, latency_s=latency_s,
             latency_jitter_s=latency_jitter_s, faults=faults,
-            lookup=lookup, service_prefix=service_prefix)
+            lookup=lookup, service_prefix=service_prefix, obs=obs)
         self.lookup = self.cluster.lookup
         self.clock = self.cluster.clock
         self.cluster.open()

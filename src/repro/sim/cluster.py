@@ -192,7 +192,8 @@ class SimCluster:
                  lookup: LookupService | None = None,
                  rereg_delay_s: float = 0.05,
                  service_prefix: str = "sim",
-                 stall_timeout_s: float = 60.0):
+                 stall_timeout_s: float = 60.0,
+                 obs=None):
         if speed_factors is None:
             speed_factors = [1.0] * (4 if n_services is None else n_services)
         self.speed_factors = [float(s) for s in speed_factors]
@@ -207,8 +208,14 @@ class SimCluster:
         self.latency_jitter_s = latency_jitter_s
         self.rereg_delay_s = rereg_delay_s
         #: assignment trace: (virtual t, task_id, service_id, attempt) in
-        #: lease order — THE determinism artifact (same seed ⇒ same list)
+        #: lease order — THE determinism artifact (same seed ⇒ same list).
+        #: With ``obs`` set the recorder's ``lease`` events supersede this
+        #: hook (the bespoke on_lease path is deprecated): the cluster
+        #: installs no hook and ``trace`` stays empty.
         self.trace: list[tuple] = []
+        self.obs = obs
+        if obs is not None:
+            obs.bind_clock(self.clock)
         master = random.Random(seed)
         faults = faults or {}
         self.services = [
@@ -311,10 +318,13 @@ class SimCluster:
         assignment-trace hook).  All timeouts/leases the client takes are
         in virtual seconds — deterministic, never load-dependent."""
         knobs.setdefault("lease_s", 1.0)
+        if self.obs is not None:
+            knobs.setdefault("obs", self.obs)
+        else:
+            knobs.setdefault("on_lease", self._record_lease)
         return BasicClient(program, None, tasks,
                            output if output is not None else [],
-                           lookup=self.lookup, clock=self.clock,
-                           on_lease=self._record_lease, **knobs)
+                           lookup=self.lookup, clock=self.clock, **knobs)
 
     def run(self, program, tasks, *, timeout: float = 600.0, **knobs):
         """Run one farm to completion; returns (output, client)."""
@@ -331,8 +341,12 @@ class SimCluster:
         from repro.core.futures import FarmExecutor
 
         knobs.setdefault("lease_s", 1.0)
+        if self.obs is not None:
+            knobs.setdefault("obs", self.obs)
+        else:
+            knobs.setdefault("on_lease", self._record_lease)
         return FarmExecutor(program, lookup=self.lookup, clock=self.clock,
-                            on_lease=self._record_lease, **knobs)
+                            **knobs)
 
     def _record_job_lease(self, job_id, task_id, service_id, attempt,
                           t) -> None:
@@ -348,8 +362,11 @@ class SimCluster:
         from repro.farm import FarmScheduler
 
         cfg.setdefault("lease_s", 1.0)
-        return FarmScheduler(self.lookup, clock=self.clock,
-                             on_lease=self._record_job_lease, **cfg)
+        if self.obs is not None:
+            cfg.setdefault("obs", self.obs)
+        else:
+            cfg.setdefault("on_lease", self._record_job_lease)
+        return FarmScheduler(self.lookup, clock=self.clock, **cfg)
 
     def ideal_makespan(self, n_tasks: int) -> float:
         """Perfect-scheduling lower bound for ``n_tasks`` uniform tasks on
