@@ -23,38 +23,53 @@ def _time(f, *args, n=5):
 
 
 def bench() -> list[tuple[str, float, str]]:
+    from repro.tune import DEFAULTS, best_config
+
     rows = []
     B, S, H, K, D = 1, 1024, 8, 2, 64
-    key = jax.random.PRNGKey(0)
-    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
-    k = jax.random.normal(key, (B, S, K, D), jnp.float32)
-    v = jax.random.normal(key, (B, S, K, D), jnp.float32)
+    # independent keys per tensor: reusing one PRNG key makes q == k up
+    # to reshape, which collapses the score distribution the softmax
+    # normalizes over — the timings were of an unrepresentative input
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, K, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, K, D), jnp.float32)
 
+    # chunking comes from the tuning cache (hand-picked default when
+    # untuned) — the benchmark measures what dispatch actually runs
+    cfg = best_config("xla_flash",
+                      {"B": B, "Sq": S, "Skv": S, "H": H, "K": K, "D": D,
+                       "Dv": D}, "float32", "xla", DEFAULTS["xla_flash"])
     naive = jax.jit(lambda q, k, v: attention_naive(q, k, v, causal=True))
-    flash = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, True, None,
-                                                        256, 256))
+    flash = jax.jit(lambda q, k, v: flash_attention_xla(
+        q, k, v, True, None, cfg["q_chunk"], cfg["kv_chunk"]))
     t_naive = _time(naive, q, k, v)
     t_flash = _time(flash, q, k, v)
     rows.append(("kernels/attention_naive_1k", t_naive * 1e6,
                  "materializes S^2 scores"))
     rows.append(("kernels/attention_flash_xla_1k", t_flash * 1e6,
-                 f"rel={t_flash/t_naive:.2f}x (memory O(S))"))
+                 f"rel={t_flash/t_naive:.2f}x (memory O(S)) "
+                 f"chunks={cfg['q_chunk']}/{cfg['kv_chunk']}"))
 
     from repro.kernels.mamba_scan.ref import mamba_scan_naive, mamba_scan_ref
 
     b, s, d, n = 2, 512, 64, 16
-    x = jax.random.normal(key, (b, s, d))
-    dt = jax.nn.softplus(jax.random.normal(key, (b, s, d)))
-    A = -jnp.exp(jax.random.normal(key, (d, n)) * 0.5)
-    Bm = jax.random.normal(key, (b, s, n))
-    C = jax.random.normal(key, (b, s, n))
+    kx, kdt, ka, kb, kc = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(kx, (b, s, d))
+    dt = jax.nn.softplus(jax.random.normal(kdt, (b, s, d)))
+    A = -jnp.exp(jax.random.normal(ka, (d, n)) * 0.5)
+    Bm = jax.random.normal(kb, (b, s, n))
+    C = jax.random.normal(kc, (b, s, n))
+    mcfg = best_config("mamba", {"b": b, "s": s, "d": d, "n": n},
+                       "float32", "xla", DEFAULTS["mamba"])
     seq = jax.jit(lambda *a: mamba_scan_naive(*a)[0])
-    chunked = jax.jit(lambda *a: mamba_scan_ref(*a)[0])
+    chunked = jax.jit(lambda *a: mamba_scan_ref(*a, chunk=mcfg["chunk"])[0])
     t_seq = _time(seq, x, dt, A, Bm, C)
     t_chk = _time(chunked, x, dt, A, Bm, C)
     rows.append(("kernels/mamba_seq_scan_512", t_seq * 1e6, ""))
     rows.append(("kernels/mamba_chunked_scan_512", t_chk * 1e6,
-                 f"speedup={t_seq/t_chk:.2f}x (chunked assoc-scan)"))
+                 f"speedup={t_seq/t_chk:.2f}x (chunked assoc-scan) "
+                 f"chunk={mcfg['chunk']}"))
     return rows
 
 

@@ -40,6 +40,15 @@ def backend(name: str, *, interpret: bool = False):
 
 def flash_attention_dispatch(q, k, v, *, causal=True, window=None,
                              block_skip=False):
+    # Tiling configs come from the persistent tuning cache (hand-picked
+    # defaults when no sweep has run) — resolved here at trace time, so
+    # serve/train/bench call sites pick up tuned configs unchanged.
+    from repro.tune.cache import best_config
+    from repro.tune.space import DEFAULTS
+
+    B, Sq, H, D = q.shape
+    _, Skv, K, Dv = v.shape
+    shape = {"B": B, "Sq": Sq, "Skv": Skv, "H": H, "K": K, "D": D, "Dv": Dv}
     if _BACKEND == "pallas" and window is None:
         from .flash_attention import ops as fa_ops
 
@@ -48,7 +57,10 @@ def flash_attention_dispatch(q, k, v, *, causal=True, window=None,
     # under shard_map when a mesh is active (collective-free attention).
     from .flash_attention.sharded import flash_attention_tp
 
-    return flash_attention_tp(q, k, v, causal=causal, window=window)
+    cfg = best_config("xla_flash", shape, str(q.dtype), "xla",
+                      DEFAULTS["xla_flash"])
+    return flash_attention_tp(q, k, v, causal=causal, window=window,
+                              q_chunk=cfg["q_chunk"], kv_chunk=cfg["kv_chunk"])
 
 
 def decode_attention_dispatch(q, k_cache, v_cache, *, cache_index, window=None):
@@ -72,6 +84,12 @@ def mamba_scan_dispatch(x, dt, A, B, C, h0=None):
         from .mamba_scan import ops as ms_ops
 
         return ms_ops.mamba_scan(x, dt, A, B, C, h0=h0, interpret=_INTERPRET)
+    from repro.tune.cache import best_config
+    from repro.tune.space import DEFAULTS
+
     from .mamba_scan import ref as ms_ref
 
-    return ms_ref.mamba_scan_ref(x, dt, A, B, C, h0=h0)
+    b, s, d = x.shape
+    cfg = best_config("mamba", {"b": b, "s": s, "d": d, "n": A.shape[-1]},
+                      str(x.dtype), "xla", DEFAULTS["mamba"])
+    return ms_ref.mamba_scan_ref(x, dt, A, B, C, h0=h0, chunk=cfg["chunk"])

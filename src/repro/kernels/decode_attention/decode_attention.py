@@ -62,14 +62,26 @@ def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 
 def decode_attention_fwd(q, k_cache, v_cache, *, cache_index,
-                         block_k: int = 512, interpret: bool = False):
+                         block_k: int | None = None,
+                         interpret: bool = False):
     """q: (B, 1, H, D); caches: (B, S, K, D[v]); cache_index: scalar int32
-    (last valid position, inclusive).  Returns (B, 1, H, Dv)."""
+    (last valid position, inclusive).  Returns (B, 1, H, Dv).
+
+    ``block_k`` defaults to the tuned ``decode`` config for this shape
+    bucket (512 when untuned); an explicit block that doesn't tile the
+    ring degrades to the largest valid divisor — typed validation, never
+    a bare assert (a bad sweep candidate must not kill its worker)."""
     B, one, H, D = q.shape
     assert one == 1
     _, S, K, Dv = v_cache.shape
-    block_k = min(block_k, S)
-    assert S % block_k == 0
+    from repro.tune.cache import best_config
+    from repro.tune.space import DEFAULTS, resolve_block
+
+    if block_k is None:
+        block_k = best_config(
+            "decode", {"B": B, "S": S, "H": H, "K": K, "D": D, "Dv": Dv},
+            str(q.dtype), "pallas", DEFAULTS["decode"])["block_k"]
+    block_k = resolve_block("block_k", S, block_k)
     nk = S // block_k
     scale = D**-0.5
 

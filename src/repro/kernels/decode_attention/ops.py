@@ -5,7 +5,9 @@ from __future__ import annotations
 from .decode_attention import decode_attention_fwd
 
 
-def decode_attention(q, k_cache, v_cache, *, cache_index, block_k: int = 512,
-                     interpret: bool = False):
+def decode_attention(q, k_cache, v_cache, *, cache_index,
+                     block_k: int | None = None, interpret: bool = False):
+    """``block_k=None`` resolves the tuned config for this shape bucket
+    from the ``repro.tune`` cache (512 when untuned)."""
     return decode_attention_fwd(q, k_cache, v_cache, cache_index=cache_index,
                                 block_k=block_k, interpret=interpret)

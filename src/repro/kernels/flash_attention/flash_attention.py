@@ -75,18 +75,43 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
         lse_ref[0, 0] = m_scr[...] + jnp.log(l)
 
 
+def _resolve_blocks(kernel: str, B, Sq, Skv, H, K, D, Dv, dtype,
+                    block_q, block_k):
+    """Fill ``None`` blocks from the tuning cache (hand-picked defaults
+    as fallback), then apply typed validation with largest-valid-divisor
+    degradation — a shape-incompatible block can never assert-kill a
+    worker mid-sweep, only a malformed one raises (typed
+    :class:`~repro.tune.space.KernelConfigError`)."""
+    from repro.tune.cache import best_config
+    from repro.tune.space import DEFAULTS, resolve_block
+
+    if block_q is None or block_k is None:
+        cfg = best_config(
+            kernel, {"B": B, "Sq": Sq, "Skv": Skv, "H": H, "K": K,
+                     "D": D, "Dv": Dv}, str(dtype), "pallas",
+            DEFAULTS[kernel])
+        block_q = cfg["block_q"] if block_q is None else block_q
+        block_k = cfg["block_k"] if block_k is None else block_k
+    return (resolve_block("block_q", Sq, block_q),
+            resolve_block("block_k", Skv, block_k))
+
+
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
-                        block_q: int = 128, block_k: int = 128,
+                        block_q: int | None = None,
+                        block_k: int | None = None,
                         interpret: bool = False, return_lse: bool = False):
     """q: (B, Sq, H, D); k, v: (B, Skv, K, D) with H % K == 0.
-    Returns (B, Sq, H, D) in q.dtype [, lse (B, H, Sq) fp32]."""
+    Returns (B, Sq, H, D) in q.dtype [, lse (B, H, Sq) fp32].
+
+    ``block_q``/``block_k`` default to the tuned config for this shape
+    bucket (``repro.tune`` cache; 128/128 when untuned); explicit values
+    degrade to the largest valid divisor if they don't tile the shape."""
     B, Sq, H, D = q.shape
     _, Skv, K, Dv = v.shape
     assert k.shape == (B, Skv, K, D)
     assert H % K == 0
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Skv)
-    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    block_q, block_k = _resolve_blocks("flash_fwd", B, Sq, Skv, H, K, D, Dv,
+                                       q.dtype, block_q, block_k)
     nq, nk = Sq // block_q, Skv // block_k
     scale = D**-0.5
 
@@ -228,15 +253,17 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, d_ref,
         dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
 
 
-def flash_attention_bwd(q, k, v, out, lse, g, *, causal=True, block_q=128,
-                        block_k=128, interpret=False):
+def flash_attention_bwd(q, k, v, out, lse, g, *, causal=True, block_q=None,
+                        block_k=None, interpret=False):
     """Backward kernels. lse: (B,H,Sq) fp32 from the forward.
-    Returns (dq, dk, dv) in input dtypes."""
+    Returns (dq, dk, dv) in input dtypes.  Blocks default to the tuned
+    ``flash_bwd`` config (the backward's balance differs from the
+    forward's — the dkv pass loads G query-head tiles per step)."""
     B, Sq, H, D = q.shape
     _, Skv, K, Dv = v.shape
     G = H // K
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Skv)
+    block_q, block_k = _resolve_blocks("flash_bwd", B, Sq, Skv, H, K, D, Dv,
+                                       q.dtype, block_q, block_k)
     nq, nk = Sq // block_q, Skv // block_k
     scale = D**-0.5
 

@@ -38,7 +38,13 @@ def _bwd(causal, block_q, block_k, interpret, res, g):
 _flash.defvjp(_fwd, _bwd)
 
 
-def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None,
                     interpret=False):
-    """Differentiable flash attention (Pallas fwd + bwd kernels)."""
+    """Differentiable flash attention (Pallas fwd + bwd kernels).
+
+    ``block_q=block_k=None`` (the default) resolves each direction's
+    blocks from the ``repro.tune`` cache independently — the forward
+    reads the ``flash_fwd`` entry, the backward ``flash_bwd`` — falling
+    back to the hand-picked 128/128.  Explicit blocks pin both
+    directions (the kernel-parity tests do this)."""
     return _flash(q, k, v, causal, block_q, block_k, interpret)

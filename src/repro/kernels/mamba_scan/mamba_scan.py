@@ -51,15 +51,26 @@ def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hf_ref,
         hf_ref[0] = h_scr[...].astype(hf_ref.dtype)
 
 
-def mamba_scan_pallas(x, dt, A, B, C, h0=None, *, chunk: int = 256,
-                      block_d: int = 256, interpret: bool = False):
+def mamba_scan_pallas(x, dt, A, B, C, h0=None, *, chunk: int | None = None,
+                      block_d: int | None = None, interpret: bool = False):
     """x, dt: (b, s, d); A: (d, n); B, C: (b, s, n).
-    Returns (y (b,s,d) fp32, h_final (b,d,n) fp32)."""
+    Returns (y (b,s,d) fp32, h_final (b,d,n) fp32).
+
+    ``chunk``/``block_d`` default to the tuned ``mamba`` config for this
+    shape bucket (256/256 when untuned); explicit values degrade to the
+    largest valid divisor via typed validation instead of asserting."""
     b, s, d = x.shape
     n = A.shape[-1]
-    chunk = min(chunk, s)
-    block_d = min(block_d, d)
-    assert s % chunk == 0 and d % block_d == 0
+    from repro.tune.cache import best_config
+    from repro.tune.space import DEFAULTS, resolve_block
+
+    if chunk is None or block_d is None:
+        cfg = best_config("mamba", {"b": b, "s": s, "d": d, "n": n},
+                          str(x.dtype), "pallas", DEFAULTS["mamba"])
+        chunk = cfg["chunk"] if chunk is None else chunk
+        block_d = cfg["block_d"] if block_d is None else block_d
+    chunk = resolve_block("chunk", s, chunk)
+    block_d = resolve_block("block_d", d, block_d)
     nc, nd = s // chunk, d // block_d
     if h0 is None:
         h0 = jnp.zeros((b, d, n), jnp.float32)

@@ -1,4 +1,7 @@
-"""jit'd wrapper: Pallas selective scan fwd + recompute (chunked-ref) bwd."""
+"""jit'd wrapper: Pallas selective scan fwd + recompute (chunked-ref) bwd.
+
+Tiling (``chunk``/``block_d``) resolves inside ``mamba_scan_pallas`` from
+the ``repro.tune`` cache for this shape bucket (256/256 when untuned)."""
 
 from __future__ import annotations
 

@@ -31,7 +31,14 @@ def mamba_scan_ref(x, dt, A, B, C, h0=None, chunk: int | None = None):
     n = A.shape[-1]
     x, dt = x.astype(jnp.float32), dt.astype(jnp.float32)
     A, B, C = A.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32)
-    c = chunk or _chunk_size(s)
+    if chunk is None:
+        c = _chunk_size(s)
+    else:
+        # typed validation + largest-divisor fallback: a tuned chunk from
+        # a bucketed cache entry may not divide this exact s
+        from repro.tune.space import resolve_block
+
+        c = resolve_block("chunk", s, chunk)
     nc = s // c
 
     if h0 is None:

@@ -29,7 +29,17 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--kill-one", action="store_true",
                     help="fault-inject a service mid-run")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="kernel tuning cache (JSON from repro.tune) — "
+                         "attention/scan dispatch picks tuned chunkings "
+                         "up from it; untuned shapes keep the defaults")
     args = ap.parse_args()
+
+    if args.tune_cache:
+        from repro.tune import configure
+
+        cache = configure(args.tune_cache)
+        print(f"tuning cache {args.tune_cache}: {len(cache)} entries")
 
     cfg = cfgs.get(args.arch)
     if args.reduced:

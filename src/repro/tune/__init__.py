@@ -1,0 +1,40 @@
+"""repro.tune — the kernel-autotuning farm.
+
+The repo's kernels shipped on hand-picked block sizes; this package
+expresses the config sweep as a farm job (the engine tuning the engine's
+own hot paths):
+
+* :mod:`~repro.tune.space` — per-kernel search spaces with static
+  pruning (divisibility, VMEM-footprint ceiling): invalid candidates
+  never reach a worker;
+* :mod:`~repro.tune.tuner` — :class:`KernelTuner` runs successive-
+  halving rounds through the existing
+  :class:`~repro.farm.FarmScheduler`, deterministic under ``sim://``
+  with the scripted cost model;
+* :mod:`~repro.tune.cache` — the persistent :class:`TuningCache`
+  (JSON on disk + in-process memo) keyed by
+  ``(kernel, shape-bucket, dtype, backend)``, consulted by kernel
+  dispatch via :func:`best_config` — serving, training and the
+  benchmarks pick up tuned configs with zero call-site changes.
+
+Quickstart::
+
+    from repro.tune import KernelTuner, configure
+
+    configure("tune_cache.json")          # install the persistent cache
+    with KernelTuner(lookup) as tuner:    # farm over registered services
+        r = tuner.tune("xla_flash",
+                       {"B": 1, "Sq": 1024, "Skv": 1024,
+                        "H": 8, "K": 2, "D": 64})
+    print(r.config, f"{r.speedup:.2f}x over default")
+    # ...every later flash_attention_dispatch at this shape-bucket now
+    # runs the tuned chunking.
+"""
+
+from .cache import (TuningCache, best_config, cache_key,  # noqa: F401
+                    configure, get_cache, set_cache, shape_bucket)
+from .measure import measure_candidate, scripted_cost_us  # noqa: F401
+from .space import (DEFAULTS, KERNELS, KernelConfigError,  # noqa: F401
+                    resolve_block, resolve_config, search_space,
+                    validate_config, vmem_bytes)
+from .tuner import KernelTuner, TuneResult  # noqa: F401

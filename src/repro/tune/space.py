@@ -1,0 +1,216 @@
+"""Search spaces for the kernel autotuner — with static pruning.
+
+One space per tunable kernel family:
+
+    ``flash_fwd``   Pallas flash-attention forward   — block_q, block_k
+    ``flash_bwd``   Pallas flash-attention backward  — block_q, block_k
+    ``decode``      Pallas flash-decode              — block_k
+    ``mamba``       chunked selective scan           — chunk (+ block_d
+                    on the Pallas backend)
+    ``xla_flash``   chunked jnp flash attention      — q_chunk, kv_chunk
+
+A candidate never reaches a farm worker unless it is *statically* valid:
+every block must divide its sequence dimension (the kernels tile without
+remainders) and the estimated VMEM working set must fit the per-core
+budget (~16 MiB on current TPUs; we cap at half to leave room for
+double-buffered pipelining).  Pruning here is what keeps a sweep cheap —
+a compile failure on a worker costs seconds, a divisibility check costs
+nothing.
+
+Shapes are plain dicts of named dims (``{"B":1,"Sq":1024,...}``) so they
+serialize through the wire protocol and into the JSON cache unchanged.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+#: per-core VMEM on current TPU generations (v4/v5e ~ 16 MiB)
+VMEM_BYTES = 16 * 1024 * 1024
+#: fraction of VMEM a kernel's working set may claim (the rest is
+#: double-buffering headroom for the pipelined grid)
+VMEM_BUDGET = 0.5
+
+#: candidate block sizes — multiples of the fp32 min sublane tile (8)
+#: up to a full 2k sequence
+_BLOCKS = (32, 64, 128, 256, 512, 1024, 2048)
+#: candidate chunk sizes for the XLA (jnp) chunked paths
+_CHUNKS = (64, 128, 256, 512, 1024, 2048, 4096)
+
+KERNELS = ("flash_fwd", "flash_bwd", "decode", "mamba", "xla_flash")
+
+#: the hand-picked defaults the kernels shipped with — the tuner's
+#: baseline and the dispatch fallback when the cache has no entry
+DEFAULTS = {
+    "flash_fwd": {"block_q": 128, "block_k": 128},
+    "flash_bwd": {"block_q": 128, "block_k": 128},
+    "decode": {"block_k": 512},
+    "mamba": {"chunk": 256, "block_d": 256},
+    "xla_flash": {"q_chunk": 512, "kv_chunk": 1024},
+}
+
+
+class KernelConfigError(ValueError):
+    """A kernel tiling config is malformed or invalid for its shape.
+
+    Raised by :func:`validate_config` (the tuner's static pruning) and by
+    the kernel entry points on *typed* nonsense (non-int / non-positive
+    blocks).  Shape-incompatible but well-typed blocks never raise at the
+    entry points — they fall back to the largest valid divisor — so a
+    bad candidate fails its task with this error at validation time and
+    can never kill a farm worker mid-sweep."""
+
+
+def resolve_block(name: str, dim: int, requested) -> int:
+    """Typed validation + largest-valid-divisor fallback for one block.
+
+    Replaces the kernels' bare ``assert dim % block == 0``: a
+    well-formed block that doesn't tile ``dim`` degrades to the largest
+    divisor of ``dim`` that is <= the request (always >= 1), while a
+    malformed one (bool, non-int, <= 0) raises :class:`KernelConfigError`.
+    """
+    if isinstance(requested, bool) or not isinstance(requested, int):
+        raise KernelConfigError(
+            f"{name} must be a positive int, got {requested!r}")
+    if requested <= 0:
+        raise KernelConfigError(f"{name} must be positive, got {requested}")
+    b = min(requested, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def resolve_config(kernel: str, shape: dict, config: dict) -> dict:
+    """The *effective* config the kernel entry point would run: every
+    block passed through :func:`resolve_block` against its dim.  This is
+    what an untuned dispatch actually executes when the hand-picked
+    default doesn't tile a small shape (e.g. ``block_d=256`` on
+    ``d=64``), so it is also the honest tuning baseline."""
+    out = dict(config)
+    for name, dim in _axes(kernel, shape).items():
+        if name in out:
+            out[name] = resolve_block(name, dim, out[name])
+    return out
+
+
+def _dims(shape: dict, *names: str) -> list[int]:
+    try:
+        return [int(shape[n]) for n in names]
+    except KeyError as e:
+        raise KernelConfigError(f"shape is missing dim {e.args[0]!r}") from e
+
+
+def vmem_bytes(kernel: str, shape: dict, config: dict) -> int:
+    """Estimated VMEM working set of one grid step (fp32 compute tiles,
+    matching the kernels' ``.astype(jnp.float32)`` loads + scratch)."""
+    f32 = 4
+    if kernel == "flash_fwd":
+        _, _, d = _dims(shape, "B", "Sq", "D")
+        dv = int(shape.get("Dv", d))
+        bq, bk = config["block_q"], config["block_k"]
+        # q + k + v tiles, out tile, acc scratch, m/l scratch
+        return f32 * (bq * d + bk * d + bk * dv + 2 * bq * dv + 2 * bq)
+    if kernel == "flash_bwd":
+        d = _dims(shape, "D")[0]
+        dv = int(shape.get("Dv", d))
+        h = int(shape.get("H", 1))
+        kv = int(shape.get("K", h))
+        g = max(1, h // max(1, kv))
+        bq, bk = config["block_q"], config["block_k"]
+        # the dkv pass dominates: G query-head tiles of q/g/lse/D plus
+        # k/v tiles and the dk/dv scratch accumulators
+        dkv = f32 * (g * bq * (d + dv + 2) + 2 * bk * (d + dv))
+        dq = f32 * (2 * bq * d + bk * (d + dv) + bq * dv + 2 * bq)
+        return max(dq, dkv)
+    if kernel == "decode":
+        d = _dims(shape, "D")[0]
+        dv = int(shape.get("Dv", d))
+        bk = config["block_k"]
+        return f32 * (bk * d + bk * dv + 2 * dv + 2)
+    if kernel == "mamba":
+        n = _dims(shape, "n")[0]
+        c, bd = config["chunk"], config.get("block_d", 256)
+        # x/dt tiles + B/C tiles + state scratch + A tile + y tile
+        return f32 * (2 * c * bd + 2 * c * n + 2 * bd * n + c * bd)
+    if kernel == "xla_flash":
+        # host/HBM chunked path — no VMEM tiling; cap the per-chunk score
+        # tensor (B*H*qc*kc fp32) at a generous HBM-side working set
+        b, h, _ = _dims(shape, "B", "H", "Sq")
+        qc, kc = config["q_chunk"], config["kv_chunk"]
+        return f32 * b * h * qc * kc
+    raise KernelConfigError(f"unknown kernel {kernel!r}")
+
+
+def _vmem_limit(kernel: str) -> int:
+    if kernel == "xla_flash":
+        return 256 * 1024 * 1024  # HBM-side chunk working set, not VMEM
+    return int(VMEM_BYTES * VMEM_BUDGET)
+
+
+def _axes(kernel: str, shape: dict) -> dict[str, int]:
+    """param name -> the sequence dim it must divide."""
+    if kernel in ("flash_fwd", "flash_bwd"):
+        sq, skv = _dims(shape, "Sq", "Skv")
+        return {"block_q": sq, "block_k": skv}
+    if kernel == "decode":
+        return {"block_k": _dims(shape, "S")[0]}
+    if kernel == "mamba":
+        s, d = _dims(shape, "s", "d")
+        return {"chunk": s, "block_d": d}
+    if kernel == "xla_flash":
+        sq, skv = _dims(shape, "Sq", "Skv")
+        return {"q_chunk": sq, "kv_chunk": skv}
+    raise KernelConfigError(f"unknown kernel {kernel!r}")
+
+
+def validate_config(kernel: str, shape: dict, config: dict) -> None:
+    """Raise :class:`KernelConfigError` unless ``config`` is exactly
+    runnable on ``shape``: every block a positive int that divides its
+    dim, and the working-set estimate under the VMEM budget."""
+    axes = _axes(kernel, shape)
+    for name, dim in axes.items():
+        if name not in config:
+            raise KernelConfigError(f"{kernel} config missing {name!r}")
+        v = config[name]
+        if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+            raise KernelConfigError(
+                f"{kernel}.{name} must be a positive int, got {v!r}")
+        if v > dim or dim % v:
+            raise KernelConfigError(
+                f"{kernel}.{name}={v} does not tile dim {dim}")
+    bytes_ = vmem_bytes(kernel, shape, config)
+    if bytes_ > _vmem_limit(kernel):
+        raise KernelConfigError(
+            f"{kernel} config {config} working set {bytes_} B exceeds "
+            f"budget {_vmem_limit(kernel)} B")
+
+
+def search_space(kernel: str, shape: dict,
+                 dtype: str = "float32") -> tuple[list[dict], int]:
+    """All statically-valid candidates for ``kernel`` on ``shape``, in a
+    deterministic canonical order, plus the number pruned.
+
+    Every returned candidate passes :func:`validate_config` — the
+    pruning invariant the tests fuzz."""
+    axes = _axes(kernel, shape)
+    values = _CHUNKS if kernel == "xla_flash" else _BLOCKS
+    # clamp each axis grid to its dim and always include the dim itself,
+    # so small shapes (short prompts, narrow models) still have a
+    # non-empty space instead of every candidate failing divisibility
+    grids = {}
+    for name, dim in axes.items():
+        base = ((64, 128, 256, 512) if kernel == "mamba"
+                and name == "block_d" else values)
+        grids[name] = tuple(sorted({v for v in base if v <= dim} | {dim}))
+    names = sorted(grids)
+    kept, pruned = [], 0
+    for combo in itertools.product(*(grids[n] for n in names)):
+        cand = dict(zip(names, combo))
+        try:
+            validate_config(kernel, shape, cand)
+        except KernelConfigError:
+            pruned += 1
+            continue
+        kept.append(cand)
+    kept.sort(key=lambda c: tuple(c[n] for n in names))
+    return kept, pruned
